@@ -1,0 +1,53 @@
+"""Survey Table 3: analytical model predictions (Hockney/LogGP) for the
+AllReduce algorithms + derivative-optimal segment sizes vs numeric minima,
+and fitted-model prediction error per family (§3.1)."""
+import numpy as np
+
+from repro.core.analytical import (
+    DEFAULT_HOCKNEY,
+    DEFAULT_LOGGP,
+    collective_cost,
+    fit_hockney,
+    fit_loggp,
+    fit_plogp,
+    optimal_segment_size,
+    prediction_error,
+    table3_ring_segmented_time,
+)
+from repro.core.tuning.simulator import NetworkSimulator
+
+from benchmarks.common import row
+
+
+def run():
+    p = 16
+    for m in (1 << 16, 1 << 22, 1 << 26):
+        for algo in ("ring", "recursive_doubling", "rabenseifner"):
+            for mdl, mname in ((DEFAULT_HOCKNEY, "hockney"),
+                               (DEFAULT_LOGGP, "loggp")):
+                t = collective_cost("all_reduce", algo, mdl, p, m)
+                row(f"table3/all_reduce/{algo}/{mname}/m{m}", t * 1e6,
+                    f"p={p}")
+        # optimal segment: closed form vs numeric minimum of the exact
+        # Table-3 expression
+        ms_closed = optimal_segment_size("all_reduce", "ring",
+                                         DEFAULT_HOCKNEY, p, m)
+        grid = np.geomspace(64, m, 2000)
+        ms_num = grid[int(np.argmin(
+            [table3_ring_segmented_time(DEFAULT_HOCKNEY, p, m, ms)
+             for ms in grid]))]
+        row(f"table3/optimal_segment/closed/m{m}", ms_closed,
+            f"numeric={ms_num:.0f}B ratio={ms_closed / ms_num:.3f}")
+
+    # §3.1.1 parameter fitting from simulated p2p measurements
+    sim = NetworkSimulator()
+    sizes = np.geomspace(256, 1 << 24, 40)
+    times = [sim.expected_time("broadcast", "flat_tree", 2, m) for m in sizes]
+    hold_s = np.geomspace(512, 1 << 23, 17)
+    hold_t = [sim.expected_time("broadcast", "flat_tree", 2, m)
+              for m in hold_s]
+    for name, fit in (("hockney", fit_hockney(sizes, times)),
+                      ("loggp", fit_loggp(sizes, times)),
+                      ("plogp", fit_plogp(sizes, times))):
+        err = prediction_error(fit, hold_s, hold_t)
+        row(f"table3/fit/{name}", err * 100, "holdout_mean_rel_err_pct")

@@ -1,0 +1,28 @@
+"""Survey Table 2: the algorithm menagerie per collective, across message
+sizes — simulated wire time (expected, noise-free) on the v5e ICI profile at
+p=16 and p=256. Shows the small/large-message crossover structure the table
+encodes."""
+from repro.core.tuning.simulator import NetworkSimulator
+from repro.core.tuning.space import OPS, TUNABLE
+
+from benchmarks.common import row
+
+SIZES = (1024, 65536, 1 << 22, 1 << 26)
+
+
+def run():
+    sim = NetworkSimulator()
+    for op in OPS:
+        for p in (16, 256):
+            best = {}
+            for algo in TUNABLE[op]:
+                if algo == "xla":
+                    continue
+                for m in SIZES:
+                    t = sim.expected_time(op, algo, p, m)
+                    row(f"table2/{op}/{algo}/p{p}/m{m}", t * 1e6,
+                        f"bytes={m}")
+                    if m not in best or t < best[m][1]:
+                        best[m] = (algo, t)
+            for m, (algo, t) in sorted(best.items()):
+                row(f"table2/{op}/BEST/p{p}/m{m}", t * 1e6, algo)

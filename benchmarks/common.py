@@ -1,0 +1,22 @@
+"""Shared benchmark scaffolding. Every table emits CSV rows
+``name,us_per_call,derived``."""
+from __future__ import annotations
+
+import time
+
+
+def row(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def timeit(fn, *args, repeats: int = 5, warmup: int = 1) -> float:
+    """Median wall-clock microseconds of fn(*args)."""
+    for _ in range(warmup):
+        fn(*args)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(*args)
+        ts.append((time.perf_counter() - t0) * 1e6)
+    ts.sort()
+    return ts[len(ts) // 2]

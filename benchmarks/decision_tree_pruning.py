@@ -1,0 +1,33 @@
+"""Survey §3.4.1 (Pjesivac-Grbovic): C4.5 pruning sweep — tree size,
+misclassification, and mean performance penalty stay low under heavy
+pruning (weight m up / confidence c down)."""
+from repro.core.tuning import (
+    BenchmarkExecutor,
+    NetworkProfile,
+    NetworkSimulator,
+    SimulatorBackend,
+)
+from repro.core.tuning.decision import mean_penalty
+from repro.core.tuning.decision_tree import DTreeDecision, misclassification
+from repro.core.tuning.exhaustive import tune_exhaustive
+from repro.core.tuning.space import Point
+
+from benchmarks.common import row
+
+OPS = ("all_reduce", "broadcast")
+PS = (2, 4, 8, 16, 32, 64, 128, 256)
+MS = tuple(256 * 4 ** i for i in range(8))
+PTS = [Point(o, p, m) for o in OPS for p in PS for m in MS]
+
+
+def run():
+    sim = NetworkSimulator(NetworkProfile(seed=31))
+    table, _, _ = tune_exhaustive(
+        BenchmarkExecutor(SimulatorBackend(sim), trials=3), OPS, PS, MS)
+    for mw, conf in ((1, 1.0), (2, 1.0), (4, 0.9), (8, 0.8), (16, 0.7)):
+        dt = DTreeDecision.fit(table, OPS, min_weight=mw, confidence=conf)
+        st = dt.stats()
+        mis = misclassification(dt, table)
+        pen = mean_penalty(dt.decide, sim, PTS)
+        row(f"dtree/m{mw}_c{conf}/penalty", pen * 100,
+            f"nodes={st['nodes']};misclass={mis * 100:.1f}pct")

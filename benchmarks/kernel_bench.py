@@ -1,0 +1,46 @@
+"""Kernel-layer microbench: XLA production paths (chunked attention, chunked
+SSD, segment combine) wall-clock on this host — relative numbers only (CPU
+host, not the TPU target), used to sanity-check scaling with shape."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+from benchmarks.common import row, timeit
+
+RNG = np.random.default_rng(0)
+
+
+def _mk(shape):
+    return jnp.asarray(RNG.normal(size=shape), jnp.float32)
+
+
+def run():
+    for S in (256, 512, 1024):
+        q = _mk((1, S, 4, 64))
+        k = _mk((1, S, 2, 64))
+        v = _mk((1, S, 2, 64))
+        f = jax.jit(lambda q, k, v: ref.attention_xla_chunked(
+            q, k, v, causal=True, chunk=256))
+        f(q, k, v).block_until_ready()
+        us = timeit(lambda: f(q, k, v).block_until_ready())
+        row(f"kernel/attention_xla/S{S}", us, "B1H4D64")
+
+    for S in (256, 1024):
+        x = _mk((1, S, 4, 64))
+        dt = jnp.asarray(RNG.uniform(0.001, 0.1, (1, S, 4)), jnp.float32)
+        A = -jnp.ones((4,), jnp.float32)
+        Bm, Cm = _mk((1, S, 64)), _mk((1, S, 64))
+        D = jnp.ones((4,), jnp.float32)
+        f = jax.jit(lambda *a: ref.ssd_chunked(*a, chunk=128))
+        f(x, dt, A, Bm, Cm, D).block_until_ready()
+        us = timeit(lambda: f(x, dt, A, Bm, Cm, D).block_until_ready())
+        row(f"kernel/ssd_chunked/S{S}", us, "H4P64N64")
+
+    for n in (1 << 16, 1 << 20):
+        a, b = _mk((n,)), _mk((n,))
+        f = jax.jit(lambda a, b: ref.segment_combine(a, b, "add"))
+        f(a, b).block_until_ready()
+        us = timeit(lambda: f(a, b).block_until_ready())
+        row(f"kernel/segment_combine/n{n}", us, "")

@@ -1,0 +1,120 @@
+"""Survey Table 4: the tuning-method comparison — model/tree generation
+time, decision (query) time, mean performance penalty vs experimental
+optimum, and accuracy on unseen grid points, for every method family."""
+import time
+
+import numpy as np
+
+from repro.core.analytical import DEFAULT_HOCKNEY
+from repro.core.analytical.costs import best_algorithm
+from repro.core.tuning import (
+    BenchmarkExecutor,
+    NetworkProfile,
+    NetworkSimulator,
+    SimulatorBackend,
+)
+from repro.core.tuning.decision import mean_penalty
+from repro.core.tuning.decision_tree import DTreeDecision
+from repro.core.tuning.exhaustive import tune_exhaustive
+from repro.core.tuning.quadtree import QuadTreeDecision
+from repro.core.tuning.regression import RegressionSelector
+from repro.core.tuning.space import Method, Point
+from repro.core.tuning.star import StarTuner
+
+from benchmarks.common import row
+
+OPS = ("all_reduce", "all_gather", "broadcast")
+PS = (4, 16, 64, 256)
+MS = tuple(1024 * 4 ** i for i in range(7))
+SEEN = [Point(o, p, m) for o in OPS for p in PS for m in MS]
+# unseen: off-grid process counts and message sizes
+UNSEEN = [Point(o, p, m) for o in OPS for p in (8, 32, 128)
+          for m in (3072, 49152, 786432, 3 << 22)]
+
+
+def run():
+    sim = NetworkSimulator(NetworkProfile(seed=11))
+    ex = BenchmarkExecutor(SimulatorBackend(sim), trials=3)
+    t0 = time.perf_counter()
+    table, ds, n_exp = tune_exhaustive(ex, OPS, PS, MS)
+    t_exh = time.perf_counter() - t0
+
+    methods = {}
+
+    # analytical modeling (no dense data set; zero experiments)
+    t0 = time.perf_counter()
+    cache = {}
+
+    def analytic_decide(op, p, m):
+        key = (op, p, m)
+        if key not in cache:
+            a, ns, _ = best_algorithm(op, DEFAULT_HOCKNEY, p, m)
+            cache[key] = Method(a, ns)
+        return cache[key]
+    methods["analytical"] = (analytic_decide, time.perf_counter() - t0, 0)
+
+    methods["empirical_aeos"] = (
+        lambda o, p, m: table.decide(o, p, m), t_exh, n_exp)
+
+    t0 = time.perf_counter()
+    qt = QuadTreeDecision.fit(table, OPS, max_depth=3)
+    methods["quadtree_d3"] = (qt.decide, time.perf_counter() - t0, n_exp)
+
+    t0 = time.perf_counter()
+    dt = DTreeDecision.fit(table, OPS, min_weight=2)
+    methods["decision_tree"] = (dt.decide, time.perf_counter() - t0, n_exp)
+
+    t0 = time.perf_counter()
+    rs = RegressionSelector.fit(ds, iters=800)
+    methods["regression_l1"] = (rs.decide, time.perf_counter() - t0, n_exp)
+
+    # ANN predictor (§3.4.3: 10 hidden sigmoid neurons, backprop)
+    from repro.core.tuning.ann import ANNSelector
+    t0 = time.perf_counter()
+    ann = ANNSelector.fit(ds, epochs=500, seed=0)
+    methods["ann_mlp"] = (ann.decide, time.perf_counter() - t0, n_exp)
+
+    # oct-tree over the full 3-d (op, p, m) cube (§3.3.2)
+    from repro.core.tuning.octree import OctreeDecision
+    t0 = time.perf_counter()
+    oc = OctreeDecision.fit(table, OPS, max_depth=4)
+    methods["octree_d4"] = (oc.decide, time.perf_counter() - t0, n_exp)
+
+    # rule-based dynamic feedback control (§3.4.5: no offline training)
+    from repro.core.tuning.feedback import FeedbackController
+    fc = FeedbackController(window=24, epsilon=0.25, seed=7)
+    t0 = time.perf_counter()
+    for pt in SEEN:
+        for _ in range(16):
+            meth = fc.select(pt.op, pt.p, pt.m)
+            fc.record(sim.measure(pt.op, meth.algorithm, pt.p, pt.m,
+                                  meth.segments)[0])
+    fc_eps = fc.epsilon
+    fc.epsilon = 0.0                      # evaluation: exploit only
+    methods["rule_feedback"] = (fc.select, time.perf_counter() - t0,
+                                fc.revisions)
+
+    # dynamic STAR (overhead measured in selection calls during run)
+    star = StarTuner()
+    t0 = time.perf_counter()
+    for pt in SEEN[:len(SEEN) // 3]:
+        for _ in range(40):
+            meth = star.select(pt.op, pt.p, pt.m)
+            t = sim.measure(pt.op, meth.algorithm, pt.p, pt.m,
+                            meth.segments)[0]
+            star.record(pt.op, pt.p, pt.m, t)
+    methods["star_dynamic"] = (
+        lambda o, p, m: (star.committed(o, p, m) or star.select(o, p, m)),
+        time.perf_counter() - t0, star.total_overhead_calls)
+
+    for name, (decide, gen_s, nexp) in methods.items():
+        t0 = time.perf_counter()
+        for pt in SEEN:
+            decide(pt.op, pt.p, pt.m)
+        q_us = (time.perf_counter() - t0) / len(SEEN) * 1e6
+        pen_seen = mean_penalty(decide, sim, SEEN)
+        pen_unseen = mean_penalty(decide, sim, UNSEEN)
+        row(f"table4/{name}/decision_query", q_us,
+            f"gen_s={gen_s:.2f};experiments={nexp}")
+        row(f"table4/{name}/penalty_seen", pen_seen * 100, "pct")
+        row(f"table4/{name}/penalty_unseen", pen_unseen * 100, "pct")

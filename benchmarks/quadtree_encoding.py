@@ -1,0 +1,38 @@
+"""Survey §3.3 (quad-tree encoding): penalty vs depth limit and accuracy
+threshold — reproduces the '<10% mean penalty with mean depth <= 3' claim."""
+from repro.core.tuning import (
+    BenchmarkExecutor,
+    NetworkProfile,
+    NetworkSimulator,
+    SimulatorBackend,
+)
+from repro.core.tuning.decision import mean_penalty
+from repro.core.tuning.exhaustive import tune_exhaustive
+from repro.core.tuning.quadtree import QuadTreeDecision
+from repro.core.tuning.space import Point
+
+from benchmarks.common import row
+
+OPS = ("all_reduce", "broadcast", "all_gather")
+PS = (2, 4, 8, 16, 32, 64, 128, 256)
+MS = tuple(256 * 4 ** i for i in range(8))
+PTS = [Point(o, p, m) for o in OPS for p in PS for m in MS]
+
+
+def run():
+    sim = NetworkSimulator(NetworkProfile(seed=21))
+    table, _, _ = tune_exhaustive(
+        BenchmarkExecutor(SimulatorBackend(sim), trials=3), OPS, PS, MS)
+    for depth in (None, 4, 3, 2, 1):
+        qt = QuadTreeDecision.fit(table, OPS, max_depth=depth)
+        st = qt.stats()
+        pen = mean_penalty(qt.decide, sim, PTS)
+        tag = "exact" if depth is None else f"d{depth}"
+        row(f"quadtree/depth_{tag}/penalty", pen * 100,
+            f"nodes={st['nodes']};mean_depth={st['mean_depth']:.2f}")
+    for acc in (1.0, 0.9, 0.8, 0.7, 0.5):
+        qt = QuadTreeDecision.fit(table, OPS, accuracy=acc)
+        st = qt.stats()
+        pen = mean_penalty(qt.decide, sim, PTS)
+        row(f"quadtree/accuracy_{acc}/penalty", pen * 100,
+            f"nodes={st['nodes']};mean_depth={st['mean_depth']:.2f}")

@@ -1,0 +1,30 @@
+"""Roofline table from the dry-run artifacts (experiments/dryrun/*.json):
+the three terms in microseconds per (arch x shape x mesh), dominant
+bottleneck, and MODEL_FLOPS/HLO_FLOPS useful ratio."""
+import glob
+import json
+import os
+
+from benchmarks.common import row
+
+
+def run(out_dir: str = "experiments/dryrun"):
+    files = sorted(glob.glob(os.path.join(out_dir, "*.json")))
+    if not files:
+        row("roofline/NO_DRYRUN_ARTIFACTS", 0, "run repro.launch.dryrun --all")
+        return
+    for f in files:
+        rec = json.load(open(f))
+        tag = f"{rec['arch']}/{rec['shape']}/{rec['mesh']}/{rec['collective']}"
+        if rec.get("status") == "skip":
+            row(f"roofline/{tag}", 0, "SKIP:" + rec.get("reason", "")[:60])
+            continue
+        r = rec["roofline"]
+        dom_us = {"compute": r["compute_s"], "memory": r["memory_s"],
+                  "collective": r["collective_s"]}[r["dominant"]] * 1e6
+        row(f"roofline/{tag}", dom_us,
+            f"dom={r['dominant']};compute_us={r['compute_s'] * 1e6:.1f};"
+            f"memory_us={r['memory_s'] * 1e6:.1f};"
+            f"coll_us={r['collective_s'] * 1e6:.1f};"
+            f"useful={r['useful_ratio']:.2f};"
+            f"peakGB={rec['memory']['peak_bytes_per_device'] / 1e9:.2f}")

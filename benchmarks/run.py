@@ -1,0 +1,53 @@
+"""Benchmark driver: one module per survey table/figure/claim.
+Prints ``name,us_per_call,derived`` CSV."""
+import argparse
+import sys
+import traceback
+
+from benchmarks import (
+    analytical_models,
+    collective_algorithms,
+    decision_tree_pruning,
+    kernel_bench,
+    method_comparison,
+    overlap,
+    quadtree_encoding,
+    roofline_report,
+    star_adaptation,
+    umtac_pipeline,
+)
+
+SUITES = {
+    "collective_algorithms": collective_algorithms,   # Table 2
+    "analytical_models": analytical_models,           # Table 3
+    "method_comparison": method_comparison,           # Table 4
+    "quadtree_encoding": quadtree_encoding,           # §3.3
+    "decision_tree_pruning": decision_tree_pruning,   # §3.4.1
+    "umtac_pipeline": umtac_pipeline,                 # §5
+    "star_adaptation": star_adaptation,               # §3.2.3
+    "overlap": overlap,                               # §4.1
+    "kernel_bench": kernel_bench,                     # kernels layer
+    "roofline_report": roofline_report,               # dry-run artifacts
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", choices=sorted(SUITES))
+    args = ap.parse_args()
+    names = args.only or list(SUITES)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in names:
+        try:
+            SUITES[name].run()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED suites: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

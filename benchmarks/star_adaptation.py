@@ -1,0 +1,46 @@
+"""Survey §3.2.3 (STAR-MPI): dynamic measure-select/monitor-adapt —
+convergence overhead, committed-vs-optimal gap, and re-adaptation after
+network drift."""
+from repro.core.tuning import NetworkProfile, NetworkSimulator, drifted, \
+    methods_for
+from repro.core.tuning.star import StarTuner
+
+from benchmarks.common import row
+
+
+def run():
+    op, p, m = "all_reduce", 16, 1 << 20
+    star = StarTuner(trials_per_candidate=3, degrade_threshold=1.3)
+    sim = NetworkSimulator(NetworkProfile(seed=51))
+
+    committed_at = None
+    cum_time = 0.0
+    for i in range(300):
+        meth = star.select(op, p, m)
+        t = sim.measure(op, meth.algorithm, p, m, meth.segments)[0]
+        cum_time += t
+        star.record(op, p, m, t)
+        if committed_at is None and star.committed(op, p, m) is not None:
+            committed_at = i + 1
+    best, t_best = sim.optimal(op, p, m, methods_for(op, include_xla=False))
+    com = star.committed(op, p, m)
+    t_com = sim.expected_time(op, com.algorithm, p, m, com.segments)
+    row("star/converged_after_calls", committed_at,
+        f"committed={com.algorithm}")
+    row("star/committed_time", t_com * 1e6,
+        f"optimal={best.algorithm}@{t_best * 1e6:.1f}us "
+        f"gap={(t_com / t_best - 1) * 100:.1f}pct")
+    row("star/measure_overhead_calls", star.total_overhead_calls, "")
+
+    # drift: bandwidth collapses 5x -> must re-adapt
+    sim2 = NetworkSimulator(drifted(sim.profile, byte_time_mult=5.0))
+    readapt_at = None
+    key = next(iter(star.ctxs))
+    for i in range(300):
+        meth = star.select(op, p, m)
+        t = sim2.measure(op, meth.algorithm, p, m, meth.segments)[0]
+        star.record(op, p, m, t)
+        if readapt_at is None and star.ctxs[key].n_adaptations > 0:
+            readapt_at = i + 1
+    row("star/readapted_after_calls", readapt_at or -1,
+        f"adaptations={star.ctxs[key].n_adaptations}")

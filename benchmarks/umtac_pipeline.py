@@ -1,0 +1,61 @@
+"""Survey §5 (UMTAC): the unified pipeline end to end on a gradient-sync
+kernel profile — holdout validation error, L1 feature sparsity, per-kernel
+time estimates, and regression-selector gain vs max possible (the ~90%
+claim of §3.4.1)."""
+import numpy as np
+
+from repro.core.tuning import (
+    BenchmarkExecutor,
+    NetworkProfile,
+    NetworkSimulator,
+    SimulatorBackend,
+    methods_for,
+)
+from repro.core.tuning.decision import mean_penalty
+from repro.core.tuning.space import Point
+from repro.core.tuning.umtac import UMTAC, KernelProfile
+
+from benchmarks.common import row
+
+MS = tuple(1024 * 4 ** i for i in range(7))
+PS = (4, 16, 64, 256)
+
+
+def run():
+    sim = NetworkSimulator(NetworkProfile(seed=41))
+    um = UMTAC(BenchmarkExecutor(SimulatorBackend(sim), trials=3))
+    # profile: a 9B-ish dense model's gradient leaves (3 sizes) + MoE a2a
+    profiles = [
+        KernelProfile("embed_grads", "all_reduce", 1_241_513_984 // 256),
+        KernelProfile("layer_grads", "all_reduce", 150_994_944 // 16),
+        KernelProfile("norm_grads", "all_reduce", 16_384),
+        KernelProfile("moe_dispatch", "all_to_all", 8 << 20),
+    ]
+    res = um.run(profiles, p=16, ps=PS, ms=MS)
+    row("umtac/holdout_err", res.holdout_err * 100,
+        f"validated={res.validated}")
+    row("umtac/feature_sparsity", res.feature_sparsity * 100,
+        "pct_zero_weights_L1")
+    row("umtac/experiments", res.n_experiments, "")
+    for name, (meth, t) in res.kernel_estimates.items():
+        row(f"umtac/kernel/{name}", t * 1e6,
+            f"{meth.algorithm}/segs{meth.segments}")
+    total = um.estimate_application(res)
+    row("umtac/app_estimate", total * 1e6, "sum_of_kernels")
+
+    # decision quality + the 90%-of-max-gain metric
+    pts = [Point(o, p, m) for o in ("all_reduce", "all_to_all")
+           for p in PS for m in MS]
+    pen = mean_penalty(res.decision.decide, sim, pts)
+    row("umtac/penalty", pen * 100, "pct")
+    tot, poss = 0.0, 0.0
+    for pt in pts:
+        ts = [sim.expected_time(pt.op, me.algorithm, pt.p, pt.m, me.segments)
+              for me in methods_for(pt.op, include_xla=False)]
+        chosen = res.decision.decide(pt.op, pt.p, pt.m)
+        t_sel = sim.expected_time(pt.op, chosen.algorithm, pt.p, pt.m,
+                                  chosen.segments)
+        poss += max(ts) - min(ts)
+        tot += max(ts) - t_sel
+    row("umtac/gain_vs_max_possible", tot / poss * 100,
+        "pct (survey ~90 claim)")

@@ -1,0 +1,55 @@
+"""The paper end-to-end: tune collective {algorithm, segment size} with every
+method family from the survey, compare their decisions and penalties, and
+emit a DecisionTable the trainer can consume via --decision.
+
+Run:  PYTHONPATH=src python examples/autotune_collectives.py
+"""
+from repro.core.tuning import (
+    BenchmarkExecutor,
+    NetworkProfile,
+    NetworkSimulator,
+    SimulatorBackend,
+)
+from repro.core.tuning.decision import mean_penalty
+from repro.core.tuning.decision_tree import DTreeDecision
+from repro.core.tuning.exhaustive import tune_exhaustive
+from repro.core.tuning.quadtree import QuadTreeDecision
+from repro.core.tuning.regression import RegressionSelector
+from repro.core.tuning.space import Point
+from repro.core.tuning.umtac import UMTAC, KernelProfile
+
+OPS = ("all_reduce", "all_gather", "all_to_all")
+PS = (4, 16, 64, 256)
+MS = tuple(1024 * 4 ** i for i in range(7))
+PTS = [Point(o, p, m) for o in OPS for p in PS for m in MS]
+
+if __name__ == "__main__":
+    sim = NetworkSimulator(NetworkProfile(seed=0))
+    ex = BenchmarkExecutor(SimulatorBackend(sim), trials=3)
+    table, ds, n = tune_exhaustive(ex, OPS, PS, MS)
+    print(f"AEOS exhaustive: {n} experiments")
+
+    rows = [("empirical(AEOS)", lambda o, p, m: table.decide(o, p, m)),
+            ("quadtree(d<=3)", QuadTreeDecision.fit(table, OPS,
+                                                    max_depth=3).decide),
+            ("decision-tree", DTreeDecision.fit(table, OPS).decide),
+            ("regression(L1)", RegressionSelector.fit(ds, iters=800).decide)]
+    print(f"{'method':16s} {'mean penalty':>12s}")
+    for name, decide in rows:
+        pen = mean_penalty(decide, sim, PTS)
+        print(f"{name:16s} {pen * 100:11.2f}%")
+
+    # UMTAC over a model-shaped kernel profile
+    um = UMTAC(BenchmarkExecutor(SimulatorBackend(sim), trials=3))
+    res = um.run([KernelProfile("embed_grad", "all_reduce", 4 << 20),
+                  KernelProfile("layer_grad", "all_reduce", 64 << 10),
+                  KernelProfile("moe_a2a", "all_to_all", 8 << 20)],
+                 p=16, ms=MS)
+    print(f"UMTAC: validated={res.validated} "
+          f"holdout_err={res.holdout_err:.3f}")
+    for kname, (meth, t) in res.kernel_estimates.items():
+        print(f"  {kname:12s} -> {meth.algorithm:20s} segs={meth.segments} "
+              f"est {t * 1e6:.1f} us/step")
+    res.decision.save("tuned_decision.json")
+    print("decision table -> tuned_decision.json "
+          "(use: python -m repro.launch.train --decision tuned_decision.json)")

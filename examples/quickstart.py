@@ -1,0 +1,55 @@
+"""Quickstart: train a reduced llama-family model on 8 simulated devices
+with the paper's technique — per-gradient-leaf TUNED collective algorithm
+selection — and compare against the XLA baseline.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, CollectiveConfig, ParallelConfig
+from repro.configs.base import ShapeConfig
+from repro.data import SyntheticPipeline
+from repro.launch.mesh import make_local_mesh
+from repro.launch.steps import build_train_step
+from repro.models.registry import build_model
+from repro.optim import AdamW
+
+
+def train(collective: str, steps: int = 10):
+    cfg = get_config("smollm-135m").reduced()
+    shape = ShapeConfig(name="qs", seq_len=128, global_batch=8, kind="train")
+    mesh = make_local_mesh(model_parallel=2)
+    fn, _, in_sh, out_sh, donate = build_train_step(
+        cfg, shape, ParallelConfig(), CollectiveConfig(algorithm=collective),
+        mesh, lr=1e-3, total_steps=steps)
+    step = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                   donate_argnums=donate)
+    api = build_model(cfg, attn_impl="xla")
+    params = jax.device_put(api.init(jax.random.PRNGKey(0)), in_sh[0])
+    opt = jax.device_put(AdamW(lr=1e-3).init(params), in_sh[1])
+    pipe = SyntheticPipeline(cfg, shape, seed=0)
+    losses = []
+    t0 = time.time()
+    for i in range(steps):
+        batch = jax.device_put(
+            {k: jnp.asarray(v) for k, v in pipe.batch_at(i).items()},
+            in_sh[2])
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    return losses, time.time() - t0
+
+
+if __name__ == "__main__":
+    print(f"devices: {jax.device_count()} (mesh 4x2 data x model)")
+    for algo in ("xla", "ring", "rabenseifner"):
+        losses, dt = train(algo)
+        print(f"gradient sync = {algo:13s} "
+              f"loss {losses[0]:.4f} -> {losses[-1]:.4f}  ({dt:.1f}s)")
+    print("same trajectory under every algorithm — the tuner is free to "
+          "pick per message size without changing training semantics.")

@@ -1,0 +1,65 @@
+"""Sharding-aware checkpointing: params/opt-state/pipeline-state round-trip
+through an npz bundle + JSON manifest with pytree structure, restoring onto
+the caller's shardings.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+def save(path: str, tree: Any, *, step: int = 0, extra: Optional[dict] = None):
+    os.makedirs(path, exist_ok=True)
+    leaves, _ = _flatten_with_paths(tree)
+    arrays = {}
+    manifest = {"step": step, "extra": extra or {}, "leaves": []}
+    for key, leaf in leaves.items():
+        arr = np.asarray(jax.device_get(leaf))
+        arrays[key.replace("/", "__")] = arr
+        manifest["leaves"].append(
+            {"key": key, "dtype": str(arr.dtype), "shape": list(arr.shape)})
+    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def restore(path: str, like: Any, *, shardings: Any = None):
+    """Restore into the structure of ``like``; optionally device_put each
+    leaf with the matching sharding tree."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves_by_key = {r["key"]: data[r["key"].replace("/", "__")]
+                     for r in manifest["leaves"]}
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    shard_flat = None
+    if shardings is not None:
+        shard_flat = jax.tree_util.tree_leaves(shardings)
+    out = []
+    for i, (pathk, leaf) in enumerate(flat):
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in pathk)
+        arr = leaves_by_key[key]
+        assert list(arr.shape) == list(leaf.shape), \
+            f"shape mismatch at {key}: {arr.shape} vs {leaf.shape}"
+        arr = arr.astype(leaf.dtype)
+        if shard_flat is not None:
+            arr = jax.device_put(arr, shard_flat[i])
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out), manifest["step"], \
+        manifest["extra"]

@@ -1,0 +1,1 @@
+"""The paper's contribution: collective algorithms, analytical models, tuning."""

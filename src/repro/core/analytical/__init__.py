@@ -1,0 +1,27 @@
+from repro.core.analytical.base import (
+    DEFAULT_HOCKNEY,
+    DEFAULT_LOGGP,
+    ICI_ALPHA,
+    ICI_BETA,
+    VPU_GAMMA,
+    CommModel,
+    Hockney,
+    LogGP,
+    LogP,
+    PLogP,
+    default_plogp,
+)
+from repro.core.analytical.costs import (
+    best_algorithm,
+    collective_cost,
+    numeric_optimal_segments,
+    optimal_segment_size,
+    table3_ring_segmented_time,
+)
+from repro.core.analytical.fitting import (
+    fit_hockney,
+    fit_loggp,
+    fit_plogp,
+    prediction_error,
+    select_best_model,
+)

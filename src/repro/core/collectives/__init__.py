@@ -1,0 +1,11 @@
+from repro.core.collectives.algorithms import ALGORITHMS, get
+from repro.core.collectives.api import (
+    XLA_DECISION,
+    CollectiveSpec,
+    DecisionSource,
+    StaticDecision,
+    TableDecision,
+    apply_collective,
+    sync_gradients,
+    sync_gradients_reduce_scatter,
+)

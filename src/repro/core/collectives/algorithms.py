@@ -1,0 +1,593 @@
+"""Collective algorithm implementations (survey §2, Table 2) on TPU meshes.
+
+Every algorithm is expressed with ``jax.lax.ppermute`` rounds inside
+``shard_map``, so the *schedule* — ring vs recursive halving vs Bruck vs
+binomial tree — is explicit in the lowered HLO as collective-permute ops with
+exact byte counts. This recreates the survey's MPI algorithm-selection
+problem above XLA: the tuner really changes the wire schedule, and the
+dry-run's collective-bytes accounting sees the difference.
+
+Conventions:
+  * functions run INSIDE shard_map; ``axis`` is the mesh axis name and
+    ``axis_size`` its static size (powers of two; asserted);
+  * "allreduce"-class take/return the full local buffer;
+  * "reduce_scatter" returns this rank's 1/p shard; "allgather" the
+    p-times-larger concatenation;
+  * ``segments>1`` splits transfers for pipelining (survey "segmentation");
+  * the elementwise combine runs through the fused Pallas segment_combine on
+    TPU (kernels/segment_reduce.py), jnp elsewhere.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+
+def _combine(a, b, op):
+    if op == "add":
+        return kops.segment_combine(a, b, "add")
+    return kops.segment_combine(a, b, op)
+
+
+def _ring_perm(p, shift=1):
+    return [(i, (i + shift) % p) for i in range(p)]
+
+
+def _log2(p: int) -> int:
+    k = p.bit_length() - 1
+    assert (1 << k) == p, f"axis size {p} must be a power of two"
+    return k
+
+
+def _flatten_pad(x, mult):
+    flat = x.reshape(-1)
+    pad = (-flat.size) % mult
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat, x.shape, x.size
+
+
+def _unflatten(flat, shape, size):
+    return flat[:size].reshape(shape)
+
+
+# ===========================================================================
+# ALL-REDUCE
+# ===========================================================================
+def allreduce_xla(x, axis, axis_size, *, op="add", segments=1):
+    del axis_size, segments
+    assert op == "add"
+    return jax.lax.psum(x, axis)
+
+
+def allreduce_recursive_doubling(x, axis, axis_size, *, op="add", segments=1):
+    """log2(p) rounds of full-buffer exchange at doubling distance (§2.1.5)."""
+    del segments
+    p = axis_size
+    out = x
+    for s in range(_log2(p)):
+        d = 1 << s
+        perm = [(i, i ^ d) for i in range(p)]
+        recv = jax.lax.ppermute(out, axis, perm)
+        out = _combine(out, recv, op)
+    return out
+
+
+def allreduce_ring(x, axis, axis_size, *, op="add", segments=1):
+    """Bandwidth-optimal ring: reduce-scatter then allgather, optionally
+    segmented for pipelining (§2.1.5 Ring)."""
+    p = axis_size
+    r = jax.lax.axis_index(axis)
+    flat, shape, size = _flatten_pad(x, p * segments)
+    m = flat.size // p
+    buf = flat.reshape(p, m)
+    seg = m // segments
+    perm = _ring_perm(p)
+
+    for g in range(segments):
+        sl = slice(g * seg, (g + 1) * seg)
+        # --- reduce-scatter ---
+        for s in range(p - 1):
+            send_idx = (r - s) % p
+            recv_idx = (r - s - 1) % p
+            send = jax.lax.dynamic_slice(buf[:, sl], (send_idx, 0), (1, seg))
+            recv = jax.lax.ppermute(send, axis, perm)
+            cur = jax.lax.dynamic_slice(buf[:, sl], (recv_idx, 0), (1, seg))
+            buf = jax.lax.dynamic_update_slice(
+                buf, jax.lax.dynamic_update_slice(
+                    buf[:, sl], _combine(cur, recv, op), (recv_idx, 0)),
+                (0, g * seg))
+        # --- allgather ---
+        for s in range(p - 1):
+            send_idx = (r + 1 - s) % p
+            send = jax.lax.dynamic_slice(buf[:, sl], (send_idx, 0), (1, seg))
+            recv = jax.lax.ppermute(send, axis, perm)
+            buf = jax.lax.dynamic_update_slice(
+                buf, jax.lax.dynamic_update_slice(
+                    buf[:, sl], recv, ((r - s) % p, 0)),
+                (0, g * seg))
+    return _unflatten(buf.reshape(-1), shape, size)
+
+
+def allreduce_rabenseifner(x, axis, axis_size, *, op="add", segments=1):
+    """Recursive (vector) halving reduce-scatter + distance-doubling
+    allgather (§2.1.5 Rabenseifner)."""
+    del segments
+    p = axis_size
+    k = _log2(p)
+    r = jax.lax.axis_index(axis)
+    flat, shape, size = _flatten_pad(x, p)
+
+    # --- reduce-scatter by recursive halving ---
+    buf = flat
+    for s in range(k):
+        d = p >> (s + 1)                      # partner distance
+        half = buf.size // 2
+        low, high = buf[:half], buf[half:]
+        bit = (r & d) != 0                    # 1 -> own the HIGH half
+        send = jnp.where(bit, low, high)
+        keep = jnp.where(bit, high, low)
+        perm = [(i, i ^ d) for i in range(p)]
+        recv = jax.lax.ppermute(send, axis, perm)
+        buf = _combine(keep, recv, op)
+
+    # --- allgather by distance doubling / vector doubling ---
+    for s in reversed(range(k)):
+        d = p >> (s + 1)
+        perm = [(i, i ^ d) for i in range(p)]
+        recv = jax.lax.ppermute(buf, axis, perm)
+        bit = (r & d) != 0
+        low = jnp.where(bit, recv, buf)
+        high = jnp.where(bit, buf, recv)
+        buf = jnp.concatenate([low, high])
+    return _unflatten(buf, shape, size)
+
+
+def allreduce_reduce_bcast(x, axis, axis_size, *, op="add", segments=1):
+    """Binomial-tree reduce to rank 0 followed by binomial broadcast
+    ("Reduce followed by Broadcast", §2.1.5)."""
+    del segments
+    red = reduce_binomial(x, axis, axis_size, op=op)
+    return broadcast_binomial(red, axis, axis_size)
+
+
+def allreduce_allgather_reduce(x, axis, axis_size, *, op="add", segments=1):
+    """Allgather everyone's buffer then reduce locally ("Allgather followed
+    by Reduce", §2.1.5) — latency-optimal only for tiny messages."""
+    del segments
+    assert op == "add"
+    gathered = allgather_recursive_doubling(x[None], axis, axis_size)
+    return jnp.sum(gathered, axis=0)
+
+
+# ===========================================================================
+# REDUCE-SCATTER
+# ===========================================================================
+def reduce_scatter_xla(x, axis, axis_size, *, op="add", segments=1):
+    del segments
+    assert op == "add"
+    flat, shape, size = _flatten_pad(x, axis_size)
+    out = jax.lax.psum_scatter(flat.reshape(axis_size, -1), axis,
+                               scatter_dimension=0, tiled=False)
+    return out
+
+
+def reduce_scatter_ring(x, axis, axis_size, *, op="add", segments=1):
+    del segments
+    p = axis_size
+    r = jax.lax.axis_index(axis)
+    flat, shape, size = _flatten_pad(x, p)
+    m = flat.size // p
+    buf = flat.reshape(p, m)
+    perm = _ring_perm(p)
+    for s in range(p - 1):
+        send_idx = (r - s - 1) % p
+        recv_idx = (r - s - 2) % p
+        send = jax.lax.dynamic_slice(buf, (send_idx, 0), (1, m))
+        recv = jax.lax.ppermute(send, axis, perm)
+        cur = jax.lax.dynamic_slice(buf, (recv_idx, 0), (1, m))
+        buf = jax.lax.dynamic_update_slice(buf, _combine(cur, recv, op),
+                                           (recv_idx, 0))
+    # with the shifted schedule, rank r ends owning exactly chunk r
+    return jax.lax.dynamic_slice(buf, (r, 0), (1, m))[0]
+
+
+def reduce_scatter_halving(x, axis, axis_size, *, op="add", segments=1):
+    """Recursive vector halving (the reduce-scatter phase of Rabenseifner)."""
+    del segments
+    p = axis_size
+    r = jax.lax.axis_index(axis)
+    flat, shape, size = _flatten_pad(x, p)
+    buf = flat
+    for s in range(_log2(p)):
+        d = p >> (s + 1)
+        half = buf.size // 2
+        low, high = buf[:half], buf[half:]
+        bit = (r & d) != 0
+        send = jnp.where(bit, low, high)
+        keep = jnp.where(bit, high, low)
+        perm = [(i, i ^ d) for i in range(p)]
+        recv = jax.lax.ppermute(send, axis, perm)
+        buf = _combine(keep, recv, op)
+    return buf
+
+
+# ===========================================================================
+# ALL-GATHER   (input: local shard; output: (p * shard) concatenation)
+# ===========================================================================
+def allgather_xla(x, axis, axis_size, *, segments=1):
+    del axis_size, segments
+    return jax.lax.all_gather(x, axis, axis=0, tiled=True)
+
+
+def allgather_ring(x, axis, axis_size, *, segments=1):
+    del segments
+    p = axis_size
+    r = jax.lax.axis_index(axis)
+    m = x.reshape(-1).size
+    buf = jnp.zeros((p, m), x.dtype)
+    buf = jax.lax.dynamic_update_slice(buf, x.reshape(1, m), (r, 0))
+    perm = _ring_perm(p)
+    for s in range(p - 1):
+        send_idx = (r - s) % p
+        send = jax.lax.dynamic_slice(buf, (send_idx, 0), (1, m))
+        recv = jax.lax.ppermute(send, axis, perm)
+        buf = jax.lax.dynamic_update_slice(buf, recv, ((r - s - 1) % p, 0))
+    return buf.reshape((p,) + x.shape).reshape((p * x.shape[0],) + x.shape[1:]) \
+        if x.ndim > 0 else buf
+
+
+def allgather_recursive_doubling(x, axis, axis_size, *, segments=1):
+    del segments
+    p = axis_size
+    r = jax.lax.axis_index(axis)
+    k = _log2(p)
+    m = x.reshape(-1).size
+    buf = x.reshape(1, m)
+    # distance doubles; buffer doubles. Track with aligned placement.
+    for s in range(k):
+        d = 1 << s
+        perm = [(i, i ^ d) for i in range(p)]
+        recv = jax.lax.ppermute(buf, axis, perm)
+        bit = (r & d) != 0
+        low = jnp.where(bit, recv, buf)
+        high = jnp.where(bit, buf, recv)
+        buf = jnp.concatenate([low, high], axis=0)
+    # buf rows are ordered by rank-id bits LSB-first; reorder to rank order
+    order = _bit_order(k)
+    buf = buf[order]
+    # buf now holds rank (r & ~mask)-aligned group == all ranks in order
+    return buf.reshape((p * x.shape[0],) + x.shape[1:]) if x.ndim > 1 \
+        else buf.reshape(p * x.shape[0]) if x.ndim == 1 else buf
+
+
+def _bit_order(k: int):
+    """Row order produced by LSB-first recursive doubling -> rank order."""
+    p = 1 << k
+    # position of rank j in the concatenated buffer: bits of (j ^ r?) — the
+    # buffer at every rank ends with rows for ranks grouped so that row index
+    # bits (LSB-first append) == rank bits LSB-first reversed per block.
+    # Empirically: row i holds rank with bit-reversed... compute directly:
+    idx = []
+    for i in range(p):
+        # row i was appended at steps per bits of i (low step = outer?) —
+        # appending doubles along axis0 with [low, high] where high is the
+        # partner at distance 2^s; so row index bit s corresponds to rank bit
+        # s directly.
+        idx.append(i)
+    return jnp.asarray(idx)
+
+
+def allgather_bruck(x, axis, axis_size, *, segments=1):
+    del segments
+    p = axis_size
+    r = jax.lax.axis_index(axis)
+    k = _log2(p)
+    m = x.reshape(-1).size
+    buf = x.reshape(1, m)
+    for s in range(k):
+        d = 1 << s
+        perm = [(i, (i - d) % p) for i in range(p)]   # send to rank-d
+        recv = jax.lax.ppermute(buf, axis, perm)      # receive from rank+d
+        buf = jnp.concatenate([buf, recv], axis=0)
+    # rank r holds blocks [r, r+1, ..., r+p-1] (mod p); rotate into order
+    buf = jnp.roll(buf, shift=r, axis=0)
+    return buf.reshape((p * x.shape[0],) + x.shape[1:]) if x.ndim > 1 \
+        else buf.reshape(-1)
+
+
+def allgather_gather_bcast(x, axis, axis_size, *, segments=1):
+    """Binomial gather to rank 0 (zero-padded slots + add) then binomial
+    broadcast ("Gather followed by Broadcast", §2.1.4)."""
+    del segments
+    p = axis_size
+    r = jax.lax.axis_index(axis)
+    m = x.reshape(-1).size
+    buf = jnp.zeros((p, m), x.dtype)
+    buf = jax.lax.dynamic_update_slice(buf, x.reshape(1, m), (r, 0))
+    red = reduce_binomial(buf, axis, p, op="add")     # gather via sparse add
+    out = broadcast_binomial(red, axis, p)
+    return out.reshape((p * x.shape[0],) + x.shape[1:]) if x.ndim > 1 \
+        else out.reshape(-1)
+
+
+# ===========================================================================
+# BROADCAST (root = 0) / REDUCE (root = 0, result replicated out of shard_map
+# convenience: every rank returns the reduced value only valid at root;
+# allreduce-style users should use reduce_bcast)
+# ===========================================================================
+def broadcast_xla(x, axis, axis_size, *, segments=1):
+    del segments
+    # XLA idiom: select root's value via masked psum
+    r = jax.lax.axis_index(axis)
+    masked = jnp.where(r == 0, x, jnp.zeros_like(x))
+    return jax.lax.psum(masked, axis)
+
+
+def broadcast_binomial(x, axis, axis_size, *, segments=1):
+    del segments
+    p = axis_size
+    r = jax.lax.axis_index(axis)
+    out = x
+    for s in range(_log2(p)):
+        a = 1 << s
+        perm = [(i, i + a) for i in range(a) if i + a < p]
+        recv = jax.lax.ppermute(out, axis, perm)
+        is_recv = (r >= a) & (r < 2 * a)
+        out = jnp.where(is_recv, recv, out)
+    return out
+
+
+def broadcast_binary_tree(x, axis, axis_size, *, segments=1):
+    """Binary tree: each inner node forwards to children 2i+1 and 2i+2
+    (§2.1.1 Binary Tree). Depth ~log2(p) but only two sends per node —
+    less pairwise parallelism than binomial, as the survey notes."""
+    del segments
+    p = axis_size
+    r = jax.lax.axis_index(axis)
+    out = x
+    # level-order: parents [2^l - 1, 2^(l+1) - 1) send to 2i+1, 2i+2
+    level = 0
+    while (1 << level) - 1 < p:
+        lo = (1 << level) - 1
+        hi = min((1 << (level + 1)) - 1, p)
+        # ppermute sources must be unique: the two child sends of each
+        # parent are two sequential rounds (matching the cost model's
+        # 2*log2(p) rounds)
+        for side in (1, 2):
+            perm = [(i, 2 * i + side) for i in range(lo, hi)
+                    if 2 * i + side < p]
+            if not perm:
+                continue
+            recv = jax.lax.ppermute(out, axis, perm)
+            dsts = jnp.asarray([d for _, d in perm])
+            is_recv = jnp.any(r == dsts)
+            out = jnp.where(is_recv, recv, out)
+        level += 1
+    return out
+
+
+def broadcast_pipelined_binary(x, axis, axis_size, *, segments=4):
+    """Pipelined tree (§2.1.1): binary-tree topology, message streamed in
+    segments so inner levels overlap."""
+    p = axis_size
+    flat, shape, size = _flatten_pad(x, max(1, segments))
+    seg = flat.size // max(1, segments)
+    outs = []
+    for g in range(max(1, segments)):
+        outs.append(broadcast_binary_tree(flat[g * seg:(g + 1) * seg],
+                                          axis, p))
+    return _unflatten(jnp.concatenate(outs), shape, size)
+
+
+def broadcast_flat_tree(x, axis, axis_size, *, segments=1):
+    """Root sends the full message to every rank in turn — the survey's
+    pedagogical worst case for large p."""
+    del segments
+    p = axis_size
+    r = jax.lax.axis_index(axis)
+    out = x
+    for dst in range(1, p):
+        recv = jax.lax.ppermute(out, axis, [(0, dst)])
+        out = jnp.where(r == dst, recv, out)
+    return out
+
+
+def broadcast_chain(x, axis, axis_size, *, segments=1):
+    """Pipelined chain: segments flow rank i -> i+1 (§2.1.1 Chain)."""
+    p = axis_size
+    r = jax.lax.axis_index(axis)
+    flat, shape, size = _flatten_pad(x, segments)
+    seg = flat.size // segments
+    perm = [(i, i + 1) for i in range(p - 1)]
+    outs = []
+    for g in range(segments):
+        cur = flat[g * seg:(g + 1) * seg]
+        for s in range(p - 1):
+            recv = jax.lax.ppermute(cur, axis, perm)
+            cur = jnp.where(r == s + 1, recv, cur)
+            # ranks past the wavefront keep forwarding what they have; ranks
+            # before it already hold the final value
+            cur = jnp.where(r <= s + 1, cur, recv)
+        outs.append(cur)
+    return _unflatten(jnp.concatenate(outs), shape, size)
+
+
+def broadcast_van_de_geijn(x, axis, axis_size, *, segments=1):
+    """Binomial scatter + ring allgather — the survey's very-long-message
+    broadcast (§2.1.1)."""
+    del segments
+    p = axis_size
+    r = jax.lax.axis_index(axis)
+    flat, shape, size = _flatten_pad(x, p)
+    m = flat.size // p
+    buf = flat.reshape(p, m)
+
+    # --- binomial scatter: rank 0 halves its range each round ---
+    for s in range(_log2(p)):
+        d = p >> (s + 1)
+        senders = [i for i in range(p) if i % (2 * d) == 0]
+        perm = [(i, i + d) for i in senders]
+        send = jax.lax.dynamic_slice(buf, (jnp.minimum(r + d, p - d), 0),
+                                     (d, m))
+        recv = jax.lax.ppermute(send, axis, perm)
+        is_recv = (r % (2 * d)) == d
+        upd = jax.lax.dynamic_update_slice(buf, recv, (r, 0))
+        buf = jnp.where(is_recv, upd, buf)
+
+    # --- ring allgather of the p chunks ---
+    own = jax.lax.dynamic_slice(buf, (r, 0), (1, m))[0]
+    gathered = allgather_ring(own, axis, p)
+    return _unflatten(gathered.reshape(-1), shape, size)
+
+
+def reduce_binomial(x, axis, axis_size, *, op="add", segments=1):
+    """Binomial-tree reduce toward rank 0 (valid at root)."""
+    del segments
+    p = axis_size
+    r = jax.lax.axis_index(axis)
+    out = x
+    for s in reversed(range(_log2(p))):
+        a = 1 << s
+        perm = [(i, i - a) for i in range(a, min(2 * a, p))]
+        recv = jax.lax.ppermute(out, axis, perm)
+        is_recv = r < a
+        out = jnp.where(is_recv, _combine(out, recv, op), out)
+    return out
+
+
+# ===========================================================================
+# ALL-TO-ALL   (input (p, chunk...) -> output (p, chunk...))
+# ===========================================================================
+def alltoall_xla(x, axis, axis_size, *, segments=1):
+    del axis_size, segments
+    return jax.lax.all_to_all(x, axis, split_axis=0, concat_axis=0,
+                              tiled=True)
+
+
+def alltoall_pairwise(x, axis, axis_size, *, segments=1):
+    """p-1 rounds; at round s exchange with partners at +-s (§2, AlltoAll)."""
+    del segments
+    p = axis_size
+    r = jax.lax.axis_index(axis)
+    m = x.size // p
+    buf = x.reshape(p, m)
+    out = jnp.zeros_like(buf)
+    out = jax.lax.dynamic_update_slice(
+        out, jax.lax.dynamic_slice(buf, (r, 0), (1, m)), (r, 0))
+    for s in range(1, p):
+        send_to = [(i, (i + s) % p) for i in range(p)]
+        send = jax.lax.dynamic_slice(buf, ((r + s) % p, 0), (1, m))
+        recv = jax.lax.ppermute(send, axis, send_to)
+        out = jax.lax.dynamic_update_slice(out, recv, ((r - s) % p, 0))
+    return out.reshape(x.shape)
+
+
+def alltoall_bruck(x, axis, axis_size, *, segments=1):
+    """log2(p) rounds moving ~half the buffer each round (latency-optimal,
+    factor-2 bandwidth overhead)."""
+    del segments
+    p = axis_size
+    r = jax.lax.axis_index(axis)
+    k = _log2(p)
+    m = x.size // p
+    # phase 1: local rotation so chunk for rank (r+j) sits at row j
+    buf = jnp.roll(x.reshape(p, m), shift=-r, axis=0)
+    # phase 2: for each bit, send rows whose index has that bit set to r+2^s
+    import numpy as np
+    rows = np.arange(p)
+    for s in range(k):
+        d = 1 << s
+        sel = np.nonzero((rows & d) != 0)[0]           # static index list
+        perm = [(i, (i + d) % p) for i in range(p)]
+        send = buf[sel]                                # (p/2, m) static shape
+        recv = jax.lax.ppermute(send, axis, perm)
+        buf = buf.at[sel].set(recv)
+    # phase 3: after phase 2, row j holds the block from rank (r - j) mod p;
+    # reverse then rotate to restore source-rank order
+    buf = jnp.roll(buf[::-1], shift=r + 1, axis=0)
+    return buf.reshape(x.shape)
+
+
+# ===========================================================================
+# BARRIER
+# ===========================================================================
+def barrier_dissemination(axis, axis_size):
+    """Butterfly/dissemination barrier (§2.1.3): log2(p) signalling rounds."""
+    p = axis_size
+    tok = jnp.zeros((1,), jnp.float32)
+    for s in range(_log2(p)):
+        d = 1 << s
+        perm = [(i, (i + d) % p) for i in range(p)]
+        tok = tok + jax.lax.ppermute(tok, axis, perm)
+    return tok
+
+
+def barrier_linear(axis, axis_size):
+    """Centralised barrier: everyone signals rank 0, rank 0 releases."""
+    p = axis_size
+    tok = jnp.ones((1,), jnp.float32)
+    arr = reduce_binomial(tok, axis, p, op="add")      # arrival
+    return broadcast_flat_tree(arr, axis, p)           # exit (linear release)
+
+
+# ===========================================================================
+# registry
+# ===========================================================================
+ALGORITHMS: Dict[str, Dict[str, Callable]] = {
+    "all_reduce": {
+        "xla": allreduce_xla,
+        "ring": allreduce_ring,
+        "recursive_doubling": allreduce_recursive_doubling,
+        "rabenseifner": allreduce_rabenseifner,
+        "reduce_bcast": allreduce_reduce_bcast,
+        "allgather_reduce": allreduce_allgather_reduce,
+    },
+    "reduce_scatter": {
+        "xla": reduce_scatter_xla,
+        "ring": reduce_scatter_ring,
+        "recursive_halving": reduce_scatter_halving,
+    },
+    "all_gather": {
+        "xla": allgather_xla,
+        "ring": allgather_ring,
+        "recursive_doubling": allgather_recursive_doubling,
+        "bruck": allgather_bruck,
+        "gather_bcast": allgather_gather_bcast,
+    },
+    "broadcast": {
+        "xla": broadcast_xla,
+        "binomial": broadcast_binomial,
+        "binary_tree": broadcast_binary_tree,
+        "pipelined_binary": broadcast_pipelined_binary,
+        "flat_tree": broadcast_flat_tree,
+        "chain": broadcast_chain,
+        "van_de_geijn": broadcast_van_de_geijn,
+    },
+    "all_to_all": {
+        "xla": alltoall_xla,
+        "pairwise": alltoall_pairwise,
+        "bruck": alltoall_bruck,
+    },
+    "reduce": {
+        "binomial": reduce_binomial,
+    },
+    "barrier": {
+        "dissemination": barrier_dissemination,
+        "linear": barrier_linear,
+    },
+}
+
+
+def get(op: str, algorithm: str) -> Callable:
+    try:
+        return ALGORITHMS[op][algorithm]
+    except KeyError:
+        raise KeyError(
+            f"no algorithm {algorithm!r} for {op!r}; "
+            f"have {sorted(ALGORITHMS.get(op, {}))}") from None

@@ -1,0 +1,19 @@
+from repro.core.tuning.decision import DecisionTable, mean_penalty
+from repro.core.tuning.executor import (
+    BenchmarkExecutor,
+    Dataset,
+    DeviceBackend,
+    Measurement,
+    SimulatorBackend,
+)
+from repro.core.tuning.simulator import NetworkProfile, NetworkSimulator, drifted
+from repro.core.tuning.space import (
+    MESSAGE_SIZES,
+    OPS,
+    PROCESS_COUNTS,
+    SEGMENT_CANDIDATES,
+    Method,
+    Point,
+    grid,
+    methods_for,
+)

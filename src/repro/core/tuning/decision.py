@@ -1,0 +1,79 @@
+"""Decision functions: the tuners' output artifact.
+
+A decision function maps a grid Point (op, p, m) to a Method {algorithm,
+segments}. `DecisionTable` is the dense-map form every tuner can emit;
+`mean_penalty` is the survey's evaluation metric (time of chosen method vs
+experimental optimum).
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import json
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.tuning.space import Method, Point, methods_for
+
+
+@dataclasses.dataclass
+class DecisionTable:
+    """Dense decision map keyed by (op, p, m)."""
+
+    table: Dict[Tuple[str, int, int], Method]
+
+    def decide(self, op: str, p: int, m: int) -> Method:
+        key = (op, p, m)
+        if key in self.table:
+            return self.table[key]
+        # nearest-on-grid lookup (interpolation along m and p, §3.2.1)
+        cand = [(pp, mm) for (oo, pp, mm) in self.table if oo == op]
+        if not cand:
+            return Method("xla", 1)
+        ps = sorted({c[0] for c in cand})
+        p_near = min(ps, key=lambda v: abs(v - p))
+        ms = sorted({mm for (pp, mm) in cand if pp == p_near})
+        i = bisect.bisect_right(ms, m)
+        m_near = ms[max(0, i - 1)]
+        return self.table.get((op, p_near, m_near), Method("xla", 1))
+
+    def as_fn(self) -> Callable[[str, int, int], Tuple[str, int]]:
+        def fn(op, nbytes, p):
+            meth = self.decide(op, p, nbytes)
+            return meth.algorithm, meth.segments
+        return fn
+
+    # -- serialization ------------------------------------------------------
+    def save(self, path: str):
+        rows = [
+            {"op": op, "p": p, "m": m,
+             "algorithm": meth.algorithm, "segments": meth.segments}
+            for (op, p, m), meth in sorted(self.table.items())
+        ]
+        with open(path, "w") as f:
+            json.dump(rows, f, indent=1)
+
+    @classmethod
+    def load(cls, path: str) -> "DecisionTable":
+        with open(path) as f:
+            rows = json.load(f)
+        return cls({(r["op"], r["p"], r["m"]):
+                    Method(r["algorithm"], r["segments"]) for r in rows})
+
+
+def mean_penalty(
+    decide: Callable[[str, int, int], Method],
+    simulator,
+    points: List[Point],
+    *,
+    include_xla: bool = False,
+) -> float:
+    """Survey metric: mean of (t_chosen - t_opt) / t_opt over grid points."""
+    total = 0.0
+    for pt in points:
+        meths = methods_for(pt.op, include_xla=include_xla)
+        _, t_opt = simulator.optimal(pt.op, pt.p, pt.m, meths)
+        chosen = decide(pt.op, pt.p, pt.m)
+        t = simulator.expected_time(pt.op, chosen.algorithm, pt.p, pt.m,
+                                    chosen.segments)
+        total += (t - t_opt) / t_opt
+    return total / max(len(points), 1)

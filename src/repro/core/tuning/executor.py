@@ -1,0 +1,168 @@
+"""Benchmark Executor (UMTAC component B): drives the experiment phases of
+§3.2.1 over a backend and accumulates the measurement dataset.
+
+Backends:
+  * SimulatorBackend — the NetworkSimulator (default everywhere in this
+    container: no real interconnect).
+  * DeviceBackend   — wall-clock timing of the real shard_map algorithm
+    implementations on host devices (used by examples/benchmarks when >1
+    device is simulated; measures schedule overhead, not wire time).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time as _time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.tuning.simulator import NetworkSimulator
+from repro.core.tuning.space import (
+    MESSAGE_SIZES,
+    OPS,
+    PROCESS_COUNTS,
+    Method,
+    Point,
+    methods_for,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Measurement:
+    op: str
+    p: int
+    m: int
+    algorithm: str
+    segments: int
+    time: float
+
+
+class Dataset:
+    def __init__(self, rows: Optional[List[Measurement]] = None):
+        self.rows: List[Measurement] = rows or []
+
+    def add(self, row: Measurement):
+        self.rows.append(row)
+
+    def __len__(self):
+        return len(self.rows)
+
+    def best(self) -> Dict[Tuple[str, int, int], Tuple[Method, float]]:
+        """Experimental optimum per grid point (mean over repeated trials)."""
+        acc: Dict[tuple, List[float]] = {}
+        for r in self.rows:
+            acc.setdefault((r.op, r.p, r.m, r.algorithm, r.segments),
+                           []).append(r.time)
+        out: Dict[Tuple[str, int, int], Tuple[Method, float]] = {}
+        for (op, p, m, a, s), ts in acc.items():
+            t = float(np.mean(ts))
+            key = (op, p, m)
+            if key not in out or t < out[key][1]:
+                out[key] = (Method(a, s), t)
+        return out
+
+    def mean_times(self) -> Dict[tuple, float]:
+        acc: Dict[tuple, List[float]] = {}
+        for r in self.rows:
+            acc.setdefault((r.op, r.p, r.m, r.algorithm, r.segments),
+                           []).append(r.time)
+        return {k: float(np.mean(v)) for k, v in acc.items()}
+
+    def to_arrays(self):
+        """Feature matrix for the learning tuners."""
+        ops = sorted({r.op for r in self.rows})
+        algs = sorted({r.algorithm for r in self.rows})
+        op_id = {o: i for i, o in enumerate(ops)}
+        alg_id = {a: i for i, a in enumerate(algs)}
+        X = np.array([[op_id[r.op], r.p, r.m, alg_id[r.algorithm],
+                       r.segments] for r in self.rows], float)
+        y = np.array([r.time for r in self.rows], float)
+        return X, y, {"ops": ops, "algorithms": algs}
+
+
+class SimulatorBackend:
+    def __init__(self, simulator: Optional[NetworkSimulator] = None):
+        self.sim = simulator or NetworkSimulator()
+
+    def measure(self, op, p, m, method: Method, trials=3) -> List[float]:
+        return self.sim.measure(op, method.algorithm, p, m, method.segments,
+                                trials=trials)
+
+
+class DeviceBackend:
+    """Times the real collective implementations on the available devices."""
+
+    def __init__(self, axis: str = "x"):
+        import jax
+        self.jax = jax
+        self.p = jax.device_count()
+        self.axis = axis
+        from jax.sharding import AxisType
+        self.mesh = jax.make_mesh((self.p,), (axis,),
+                                  axis_types=(AxisType.Auto,))
+        self._cache: dict = {}
+
+    def _fn(self, op, method: Method, n_elems: int):
+        key = (op, method, n_elems)
+        if key in self._cache:
+            return self._cache[key]
+        import jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        from repro.core.collectives import algorithms as alg
+        f = alg.get(op, method.algorithm)
+        p, axis = self.p, self.axis
+
+        def run(x):
+            if op in ("all_reduce", "reduce_scatter"):
+                return f(x, axis, p, op="add", segments=method.segments)
+            return f(x, axis, p, segments=method.segments)
+
+        jitted = self.jax.jit(self.jax.shard_map(
+            run, mesh=self.mesh, in_specs=P(None), out_specs=P(None),
+            check_vma=False))
+        x = jnp.ones((n_elems,), jnp.float32)
+        jitted(x).block_until_ready()           # compile once
+        self._cache[key] = (jitted, x)
+        return self._cache[key]
+
+    def measure(self, op, p, m, method: Method, trials=3) -> List[float]:
+        assert p == self.p, "DeviceBackend measures at the real device count"
+        n_elems = max(1, int(m) // 4)
+        jitted, x = self._fn(op, method, n_elems)
+        out = []
+        for _ in range(trials):
+            t0 = _time.perf_counter()
+            jitted(x).block_until_ready()
+            out.append(_time.perf_counter() - t0)
+        return out
+
+
+class BenchmarkExecutor:
+    """Runs the §3.2.1 experiment phases and returns the Dataset."""
+
+    def __init__(self, backend=None, trials: int = 3):
+        self.backend = backend or SimulatorBackend()
+        self.trials = trials
+        self.n_experiments = 0
+
+    def run_point(self, ds: Dataset, pt: Point,
+                  methods: Optional[Sequence[Method]] = None):
+        for meth in (methods or methods_for(pt.op, include_xla=False)):
+            for t in self.backend.measure(pt.op, pt.p, pt.m, meth,
+                                          trials=self.trials):
+                ds.add(Measurement(pt.op, pt.p, pt.m, meth.algorithm,
+                                   meth.segments, t))
+                self.n_experiments += 1
+
+    def run_grid(
+        self,
+        ops: Sequence[str] = OPS,
+        ps: Sequence[int] = PROCESS_COUNTS,
+        ms: Sequence[int] = MESSAGE_SIZES,
+    ) -> Dataset:
+        ds = Dataset()
+        for op in ops:
+            for p in ps:
+                for m in ms:
+                    self.run_point(ds, Point(op, p, m))
+        return ds

@@ -1,0 +1,64 @@
+"""The tuning parameter space (survey §3): the 3-d experiment grid
+{op, processes, message size} and the 2-tuple output {algorithm, segments}.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Sequence
+
+from repro.core.collectives.algorithms import ALGORITHMS
+
+OPS: tuple = ("all_reduce", "reduce_scatter", "all_gather", "broadcast",
+              "all_to_all")
+
+#: tunable (non-xla) algorithms per op
+TUNABLE: Dict[str, List[str]] = {
+    op: [a for a in algos] for op, algos in ALGORITHMS.items()
+    if op in OPS
+}
+
+SEGMENT_CANDIDATES = (1, 2, 4, 8, 16, 32, 64)
+
+#: default experiment grid (bytes) — powers of four from 256 B to 256 MB
+MESSAGE_SIZES = tuple(256 * 4 ** i for i in range(10))
+
+PROCESS_COUNTS = (2, 4, 8, 16, 32, 64, 128, 256)
+
+#: which algorithms support segmentation
+SEGMENTED = {
+    ("all_reduce", "ring"),
+    ("broadcast", "chain"),
+    ("broadcast", "pipelined_binary"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Point:
+    """One cell of the 3-d experiment grid."""
+    op: str
+    p: int
+    m: int                      # message bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class Method:
+    """The survey's output 2-tuple."""
+    algorithm: str
+    segments: int = 1
+
+
+def methods_for(op: str, include_xla: bool = True) -> List[Method]:
+    out = []
+    for a in TUNABLE[op]:
+        if not include_xla and a == "xla":
+            continue
+        segs = SEGMENT_CANDIDATES if (op, a) in SEGMENTED else (1,)
+        out.extend(Method(a, s) for s in segs)
+    return out
+
+
+def grid(ops: Sequence[str] = OPS,
+         ps: Sequence[int] = PROCESS_COUNTS,
+         ms: Sequence[int] = MESSAGE_SIZES) -> List[Point]:
+    return [Point(o, p, m) for o, p, m in itertools.product(ops, ps, ms)]

@@ -1,0 +1,74 @@
+"""Fused segment-combine kernel: the reduction step of ring/Rabenseifner
+pipelines.
+
+In the survey's MPI world this work is done by the NIC ("collective
+offloading", §4.2.2F) or the host CPU between ring steps. On TPU the analogue
+is a VPU elementwise combine that runs while the next collective-permute is in
+flight: ``acc <- acc (op) incoming`` over VMEM tiles, fp32 accumulation with
+cast back to the wire dtype.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_LANE = 128
+
+
+def _combine_kernel(acc_ref, part_ref, out_ref, *, op):
+    a = acc_ref[...].astype(jnp.float32)
+    p = part_ref[...].astype(jnp.float32)
+    if op == "add":
+        r = a + p
+    elif op == "max":
+        r = jnp.maximum(a, p)
+    elif op == "min":
+        r = jnp.minimum(a, p)
+    else:
+        raise ValueError(op)
+    out_ref[...] = r.astype(out_ref.dtype)
+
+
+def segment_combine_pallas(
+    acc: jax.Array,
+    part: jax.Array,
+    op: str = "add",
+    *,
+    block_rows: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """Elementwise combine of a ring segment, tiled (block_rows, 128) in VMEM."""
+    assert acc.shape == part.shape and acc.dtype == part.dtype
+    shape, dtype = acc.shape, acc.dtype
+    n = acc.size
+    a = acc.reshape(-1)
+    p = part.reshape(-1)
+    pad = (-n) % _LANE
+    if pad:
+        a = jnp.pad(a, (0, pad))
+        p = jnp.pad(p, (0, pad))
+    rows = a.size // _LANE
+    a = a.reshape(rows, _LANE)
+    p = p.reshape(rows, _LANE)
+    br = min(block_rows, rows)
+    rpad = (-rows) % br
+    if rpad:
+        a = jnp.pad(a, ((0, rpad), (0, 0)))
+        p = jnp.pad(p, ((0, rpad), (0, 0)))
+    grid = a.shape[0] // br
+
+    out = pl.pallas_call(
+        functools.partial(_combine_kernel, op=op),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((br, _LANE), lambda i: (i, 0)),
+            pl.BlockSpec((br, _LANE), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, _LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(a.shape, dtype),
+        interpret=interpret,
+    )(a, p)
+    return out.reshape(-1)[:n].reshape(shape)

@@ -1,0 +1,125 @@
+"""Mamba2 SSD within-chunk kernel (state-space duality) in Pallas.
+
+TPU-native decomposition of the SSD algorithm: the O(S * Q * (N + P)) dense
+within-chunk work (score tile, intra-chunk output, chunk-state outer product)
+runs on the MXU inside this kernel, one (batch, head, chunk) program at a
+time; the O(nc * N * P) inter-chunk recurrence — far too small to feed a
+systolic array — stays outside as a ``lax.scan``. This mirrors how the GPU
+algorithm's warp-level scan is *re-thought* for TPU rather than ported: the
+sequential part is moved to XLA where it is cheap, the parallel part is tiled
+for VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_chunk_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref,
+                      y_ref, state_ref, cum_ref, *, chunk):
+    x = x_ref[0, 0, 0].astype(jnp.float32)        # (Q, P)
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)      # (Q,)
+    Bm = b_ref[0, 0].astype(jnp.float32)          # (Q, N)
+    Cm = c_ref[0, 0].astype(jnp.float32)          # (Q, N)
+    A = a_ref[0].astype(jnp.float32)              # scalar decay rate (negative)
+
+    a = dt * A                                    # (Q,) log-decay per step
+    cum = jnp.cumsum(a)                           # (Q,)
+    total = cum[-1]
+
+    # intra-chunk: scores[t,s] = (C_t . B_s) * exp(cum_t - cum_s) * dt_s, s<=t
+    diff = cum[:, None] - cum[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    diff = jnp.where(tri, diff, -1e30)
+    decay = jnp.exp(diff)
+    cb = jax.lax.dot_general(
+        Cm, Bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                             # (Q, Q)
+    scores = cb * decay * dt[None, :]
+    y = jax.lax.dot_general(
+        scores, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                             # (Q, P)
+
+    # chunk state: sum_s exp(total - cum_s) dt_s B_s x_s^T  -> (N, P)
+    w = jnp.exp(total - cum) * dt                 # (Q,)
+    state = jax.lax.dot_general(
+        Bm * w[:, None], x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    y_ref[0, 0, 0] = y
+    state_ref[0, 0, 0] = state
+    cum_ref[0, 0, 0] = cum
+
+
+def ssd_chunked_pallas(
+    x: jax.Array,        # (B, S, H, P)
+    dt: jax.Array,       # (B, S, H)
+    A: jax.Array,        # (H,)
+    Bm: jax.Array,       # (B, S, N)
+    Cm: jax.Array,       # (B, S, N)
+    D: jax.Array,        # (H,)
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0, f"seq {S} not divisible by chunk {chunk}"
+    nc = S // chunk
+
+    xt = jnp.moveaxis(x, 2, 1).reshape(Bsz, H, nc, chunk, P)
+    dtt = jnp.moveaxis(dt, 2, 1).reshape(Bsz, H, nc, chunk)
+    Bt = Bm.reshape(Bsz, nc, chunk, N)
+    Ct = Cm.reshape(Bsz, nc, chunk, N)
+
+    kernel = functools.partial(_ssd_chunk_kernel, chunk=chunk)
+    y_intra, states, cum = pl.pallas_call(
+        kernel,
+        grid=(Bsz, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, chunk, P), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, chunk), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b, h, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b, h, c: (b, c, 0, 0)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, chunk, P), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, N, P), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, chunk), lambda b, h, c: (b, h, c, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bsz, H, nc, chunk, P), jnp.float32),
+            jax.ShapeDtypeStruct((Bsz, H, nc, N, P), jnp.float32),
+            jax.ShapeDtypeStruct((Bsz, H, nc, chunk), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xt, dtt, Bt, Ct, A.astype(jnp.float32))
+
+    # inter-chunk recurrence (tiny; XLA scan)
+    gamma = jnp.exp(cum[..., -1])                          # (B,H,nc)
+
+    def step(state, inp):
+        g, cs = inp                                        # (B,H),(B,H,N,P)
+        return state * g[..., None, None] + cs, state
+
+    init = jnp.zeros((Bsz, H, N, P), jnp.float32)
+    _, before = jax.lax.scan(
+        step, init,
+        (jnp.moveaxis(gamma, 2, 0), jnp.moveaxis(states, 2, 0)),
+    )
+    before = jnp.moveaxis(before, 0, 2)                    # (B,H,nc,N,P)
+
+    y_inter = jnp.einsum(
+        "bhct,bctn,bhcnp->bhctp", jnp.exp(cum), Ct, before
+    )
+    y = y_intra + y_inter                                  # (B,H,nc,Q,P)
+    y = y.reshape(Bsz, H, S, P)
+    y = jnp.moveaxis(y, 1, 2)                              # (B,S,H,P)
+    y = y + x.astype(jnp.float32) * D.astype(jnp.float32)[None, None, :, None]
+    return y.astype(x.dtype)

@@ -1,0 +1,327 @@
+"""Step builders: train / prefill / decode, with shardings and the tuned
+collective path.
+
+``build_step`` is the single entry the launcher, dry-run and tests share:
+it returns the jit-able function, example ShapeDtypeStructs and shardings
+for every argument — so ``.lower().compile()`` needs no real allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (
+    CollectiveConfig,
+    ModelConfig,
+    ParallelConfig,
+    ShapeConfig,
+)
+from repro.core.collectives import api as capi
+from repro.models.registry import build_model, train_batch_structs
+from repro.optim import AdamW, cosine_with_warmup
+from repro.parallel import sharding as sh
+
+LONG_CONTEXT_WINDOW = 8192
+
+
+@dataclasses.dataclass
+class ServePlan:
+    run: bool
+    cache_len: int = 0
+    window: int = 0
+    reason: str = ""
+
+
+def serve_plan(cfg: ModelConfig, shape: ShapeConfig) -> ServePlan:
+    """Decode policy per DESIGN.md §4."""
+    S = shape.seq_len
+    if cfg.family == "ssm":
+        return ServePlan(run=True, cache_len=0, window=0)
+    if cfg.family == "encdec":
+        if S > 32_768:
+            return ServePlan(run=False, reason=(
+                "whisper decoder is architecturally capped; 500k windowed "
+                "decoder self-attention exercises nothing real (DESIGN §4)"))
+        return ServePlan(run=True, cache_len=S, window=0)
+    if S > 32_768:
+        # sub-quadratic requirement: sliding window for attention caches
+        return ServePlan(run=True, cache_len=LONG_CONTEXT_WINDOW,
+                         window=LONG_CONTEXT_WINDOW)
+    return ServePlan(run=True, cache_len=S, window=0)
+
+
+# ---------------------------------------------------------------------------
+def _decision_source(coll: CollectiveConfig) -> capi.DecisionSource:
+    if coll.decision:
+        from repro.core.tuning.decision import DecisionTable
+        return capi.TableDecision(DecisionTable.load(coll.decision).as_fn())
+    return capi.StaticDecision(
+        capi.CollectiveSpec(coll.algorithm, max(1, coll.segment_bytes and 8)))
+
+
+def build_train_step(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    parallel: ParallelConfig,
+    coll: CollectiveConfig,
+    mesh,
+    *,
+    lr: float = 3e-4,
+    total_steps: int = 1000,
+    warmup_steps: int = 100,
+    accounting: bool = False,
+):
+    """Returns (fn, args_structs, in_shardings, out_shardings, donate).
+
+    ``accounting=True`` builds the cost-accounting variant: layer loops
+    literally unrolled, un-chunked attention/loss — compile-only, used by the
+    dry-run to correct XLA's count-loop-bodies-once cost analysis."""
+    sh.set_current_mesh(mesh)
+    sh.set_seq_sharding(parallel.seq_shard_activations)
+    ep_axis = "model" if (cfg.family == "moe"
+                          and sh.model_size(mesh) > 1) else None
+    api = build_model(
+        cfg,
+        ep_axis=ep_axis,
+        mesh=mesh,
+        remat=(parallel.remat != "none"),
+        attn_impl="ref" if accounting else
+        ("xla" if jax.default_backend() != "tpu" else "auto"),
+        unroll=accounting,
+        loss_chunk=(1 << 30) if accounting else 512,
+        a2a_algorithm=coll.a2a_algorithm,
+    )
+    opt = AdamW(lr=lr)
+
+    key = jax.random.PRNGKey(0)
+    params_s = jax.eval_shape(api.init, key)
+    opt_s = jax.eval_shape(opt.init, params_s)
+    batch_s = train_batch_structs(cfg, shape)
+
+    pspecs = sh.param_specs(params_s, cfg, parallel, mesh)
+    ospecs = type(opt_s)(step=P(), mu=pspecs, nu=pspecs)
+    bspecs = sh.batch_specs(batch_s, mesh, shape)
+
+    tuned = coll.algorithm != "xla" or coll.decision is not None
+    dpx = sh.dp_axes(mesh)
+    dsz = sh.dp_size(mesh)
+
+    if tuned and parallel.shard_params_over_data:
+        raise ValueError("tuned gradient sync requires non-FSDP params "
+                         "(DESIGN.md §3); use algorithm='xla' with FSDP")
+
+    decision = _decision_source(coll)
+
+    def lr_scale(step):
+        return cosine_with_warmup(step, warmup_steps=warmup_steps,
+                                  total_steps=total_steps)
+
+    def loss_with_cast(params, batch):
+        if parallel.gather_in_compute_dtype:
+            params = jax.tree.map(
+                lambda p: p.astype(jnp.bfloat16)
+                if p.dtype == jnp.float32 else p, params)
+        return api.loss(params, batch)
+
+    def grad_fn(params, batch):
+        """value_and_grad, optionally microbatched (survey §4.1 CCTP:
+        tiling the step so collectives of tile i overlap compute of tile
+        i+1 — XLA's latency-hiding scheduler interleaves the per-tile
+        gradient collectives with the next tile's backward)."""
+        k = max(1, coll.overlap_microbatches)
+        if k == 1:
+            return jax.value_and_grad(loss_with_cast, has_aux=True)(
+                params, batch)
+        B = jax.tree.leaves(batch)[0].shape[0]
+        assert B % k == 0, f"batch {B} not divisible by {k} microbatches"
+        mbs = jax.tree.map(
+            lambda a: a.reshape((k, B // k) + a.shape[1:]), batch)
+
+        def body(acc, mb):
+            (l, aux), g = jax.value_and_grad(loss_with_cast, has_aux=True)(
+                params, mb)
+            acc_l, acc_aux, acc_g = acc
+            return (acc_l + l / k,
+                    jax.tree.map(lambda a, b: a + b / k, acc_aux, aux),
+                    jax.tree.map(lambda a, b: a + b / k, acc_g, g)), None
+
+        (l0, aux0), g0 = jax.eval_shape(
+            lambda p, b: jax.value_and_grad(loss_with_cast, has_aux=True)(
+                p, b), params, jax.tree.map(lambda a: a[0], mbs))
+        zeros = lambda t: jax.tree.map(
+            lambda x: jnp.zeros(x.shape, x.dtype), t)
+        (loss, aux, grads), _ = jax.lax.scan(
+            body, (jnp.zeros(l0.shape, l0.dtype), zeros(aux0), zeros(g0)),
+            mbs)
+        return (loss, aux), grads
+
+    if not tuned:
+        def fn(params, opt_state, batch):
+            (loss, aux), grads = grad_fn(params, batch)
+            new_params, new_opt = opt.update(
+                grads, opt_state, params, lr_scale=lr_scale(opt_state.step))
+            return new_params, new_opt, {"loss": loss, **aux}
+    else:
+        # partial-manual shard_map over the data axes: per-shard backward,
+        # tuned per-leaf gradient all-reduce (the paper's technique), local
+        # optimizer step on replicated params
+        def fn(params, opt_state, batch):
+            def inner(params, opt_state, batch):
+                (loss, aux), grads = grad_fn(params, batch)
+                # tuned algorithms run within the pod ("data" ring); the
+                # cross-pod hop is a hierarchical psum on top (topology-aware
+                # two-level schedule, survey §1 "network specific")
+                grads = capi.sync_gradients(grads, "data",
+                                            mesh.shape["data"], decision,
+                                            mean=False)
+                if "pod" in dpx:
+                    grads = jax.tree.map(
+                        lambda g: jax.lax.psum(g, "pod"), grads)
+                grads = jax.tree.map(lambda g: g / dsz, grads)
+                loss = jax.lax.pmean(loss, dpx)
+                aux = jax.tree.map(lambda v: jax.lax.pmean(v, dpx), aux)
+                new_params, new_opt = opt.update(
+                    grads, opt_state, params,
+                    lr_scale=lr_scale(opt_state.step))
+                return new_params, new_opt, {"loss": loss, **aux}
+
+            rep = jax.tree.map(lambda _: P(), params)
+            repo = type(opt_state)(step=P(),
+                                   mu=jax.tree.map(lambda _: P(), params),
+                                   nu=jax.tree.map(lambda _: P(), params))
+            bspec_local = sh.batch_specs(batch, mesh, shape)
+            return jax.shard_map(
+                inner, mesh=mesh,
+                in_specs=(rep, repo, bspec_local),
+                out_specs=(rep, repo, P()),
+                axis_names=set(dpx), check_vma=False,
+            )(params, opt_state, batch)
+
+    args = (params_s, opt_s, batch_s)
+    in_sh = (sh.to_named(pspecs, mesh), sh.to_named(ospecs, mesh),
+             sh.to_named(bspecs, mesh))
+    out_sh = (sh.to_named(pspecs, mesh), sh.to_named(ospecs, mesh), None)
+    return fn, args, in_sh, out_sh, (0, 1)
+
+
+def build_prefill_step(cfg: ModelConfig, shape: ShapeConfig,
+                       parallel: ParallelConfig, coll: CollectiveConfig,
+                       mesh, *, accounting: bool = False):
+    """Forward pass producing logits over the prompt (inference-prefill)."""
+    sh.set_current_mesh(mesh)
+    sh.set_seq_sharding(parallel.seq_shard_activations)
+    ep_axis = "model" if (cfg.family == "moe"
+                          and sh.model_size(mesh) > 1) else None
+    ai = "ref" if accounting else \
+        ("xla" if jax.default_backend() != "tpu" else "auto")
+    api = build_model(
+        cfg, ep_axis=ep_axis, mesh=mesh, param_dtype=jnp.bfloat16,
+        attn_impl=ai, unroll=accounting, a2a_algorithm=coll.a2a_algorithm)
+
+    key = jax.random.PRNGKey(0)
+    params_s = jax.eval_shape(api.init, key)
+    batch_s = train_batch_structs(cfg, shape)
+    batch_s.pop("labels")
+
+    pspecs = sh.param_specs(params_s, cfg, parallel, mesh)
+    bspecs = sh.batch_specs(batch_s, mesh, shape)
+
+    from repro.models import layers as L
+    from repro.models import transformer as T
+
+    def fn(params, batch):
+        if cfg.family == "encdec":
+            from repro.models import encdec
+            enc = encdec.encode(params, batch["audio"], cfg, attn_impl=ai,
+                                unroll=accounting)
+            h = encdec.decode_train(params, batch["tokens"], enc, cfg,
+                                    attn_impl=ai, unroll=accounting)
+            return T.logits_fn(params, h, cfg)[:, -1]
+        if cfg.family == "vlm":
+            from repro.models import vlm
+            x = vlm.assemble_embeds(params, batch, cfg, jnp.bfloat16)
+            h = T.forward(params, x, cfg, attn_impl=ai, unroll=accounting)
+            return T.logits_fn(params, h, cfg)[:, -1]
+        if cfg.family == "moe":
+            from repro.models import moe_model
+            x = T.embed_tokens(params, batch["tokens"], cfg, jnp.bfloat16)
+            h, _ = moe_model.forward(params, x, cfg, ep_axis=ep_axis,
+                                     mesh=mesh, attn_impl=ai,
+                                     unroll=accounting,
+                                     a2a_algorithm=coll.a2a_algorithm)
+            return T.logits_fn(params, h, cfg)[:, -1]
+        if cfg.family == "ssm":
+            from repro.models import ssm
+            x = T.embed_tokens(params, batch["tokens"], cfg, jnp.bfloat16)
+            h = ssm.forward(params, x, cfg, unroll=accounting)
+            return T.logits_fn(params, h, cfg)[:, -1]
+        if cfg.family == "hybrid":
+            from repro.models import hybrid
+            x = T.embed_tokens(params, batch["tokens"], cfg, jnp.bfloat16)
+            h = hybrid.forward(params, x, cfg, attn_impl=ai,
+                               unroll=accounting)
+            return T.logits_fn(params, h, cfg)[:, -1]
+        x = T.embed_tokens(params, batch["tokens"], cfg, jnp.bfloat16)
+        h = T.forward(params, x, cfg, attn_impl=ai, unroll=accounting)
+        return T.logits_fn(params, h, cfg)[:, -1]
+
+    args = (params_s, batch_s)
+    in_sh = (sh.to_named(pspecs, mesh), sh.to_named(bspecs, mesh))
+    return fn, args, in_sh, None, ()
+
+
+def build_decode_step(cfg: ModelConfig, shape: ShapeConfig,
+                      parallel: ParallelConfig, coll: CollectiveConfig,
+                      mesh, *, shard_cache_seq: bool = False,
+                      accounting: bool = False):
+    """One-token serve step against a seq_len KV cache."""
+    sh.set_current_mesh(mesh)
+    sh.set_seq_sharding(parallel.seq_shard_activations)
+    plan = serve_plan(cfg, shape)
+    assert plan.run, plan.reason
+    api = build_model(
+        cfg, window=plan.window, ep_axis=None, mesh=mesh,
+        param_dtype=jnp.bfloat16, unroll=accounting,
+        attn_impl="ref" if accounting else
+        ("xla" if jax.default_backend() != "tpu" else "auto"))
+
+    key = jax.random.PRNGKey(0)
+    params_s = jax.eval_shape(api.init, key)
+    B = shape.global_batch
+    cache_s = jax.eval_shape(
+        functools.partial(api.init_cache, B, max(plan.cache_len, 1)))
+    tok_s = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+
+    pspecs = sh.param_specs(params_s, cfg, parallel, mesh)
+    cspecs = sh.cache_specs(cache_s, cfg, mesh,
+                            shard_cache_seq=shard_cache_seq)
+    dpx = sh.dp_axes(mesh)
+    tok_spec = P(dpx if B % sh.dp_size(mesh) == 0 else None, None)
+
+    def fn(params, cache, tokens):
+        logits, new_cache = api.decode_step(params, cache, tokens)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return nxt, new_cache
+
+    args = (params_s, cache_s, tok_s)
+    in_sh = (sh.to_named(pspecs, mesh), sh.to_named(cspecs, mesh),
+             NamedSharding(mesh, tok_spec))
+    out_sh = (NamedSharding(mesh, tok_spec), sh.to_named(cspecs, mesh))
+    return fn, args, in_sh, out_sh, (1,)
+
+
+def build_step(cfg: ModelConfig, shape: ShapeConfig,
+               parallel: Optional[ParallelConfig] = None,
+               coll: Optional[CollectiveConfig] = None, mesh=None, **kw):
+    parallel = parallel or ParallelConfig()
+    coll = coll or CollectiveConfig()
+    if shape.kind == "train":
+        return build_train_step(cfg, shape, parallel, coll, mesh, **kw)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, shape, parallel, coll, mesh, **kw)
+    return build_decode_step(cfg, shape, parallel, coll, mesh, **kw)

@@ -1,0 +1,94 @@
+"""Training launcher.
+
+Runs real steps on the available devices (use
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to simulate a mesh on
+CPU). The tuned-collective path is selected with --collective / --decision.
+
+Examples:
+    python -m repro.launch.train --arch smollm-135m --reduced --steps 20
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        python -m repro.launch.train --arch smollm-135m --reduced \\
+        --steps 20 --collective ring --model-parallel 2
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import save
+from repro.configs import ARCHITECTURES, CollectiveConfig, ParallelConfig
+from repro.configs.base import ShapeConfig
+from repro.data import SyntheticPipeline
+from repro.launch.mesh import make_local_mesh
+from repro.launch.steps import build_train_step
+from repro.models.registry import build_model
+from repro.optim import AdamW
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m",
+                    choices=sorted(ARCHITECTURES))
+    ap.add_argument("--reduced", action="store_true",
+                    help="2-layer smoke variant instead of the full config")
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--collective", default="xla",
+                    help="gradient-sync algorithm (xla/ring/rabenseifner/...)")
+    ap.add_argument("--decision", default=None,
+                    help="path to a tuned DecisionTable json")
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--log-every", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = ARCHITECTURES[args.arch]
+    if args.reduced:
+        cfg = cfg.reduced()
+    shape = ShapeConfig(name="cli", seq_len=args.seq,
+                        global_batch=args.batch, kind="train")
+    mesh = make_local_mesh(model_parallel=args.model_parallel)
+    parallel = ParallelConfig()
+    coll = CollectiveConfig(algorithm=args.collective,
+                            decision=args.decision)
+
+    fn, _, in_sh, out_sh, donate = build_train_step(
+        cfg, shape, parallel, coll, mesh, lr=args.lr,
+        total_steps=args.steps)
+    step_fn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                      donate_argnums=donate)
+
+    api = build_model(cfg, attn_impl="xla"
+                      if jax.default_backend() != "tpu" else "auto")
+    params = jax.device_put(api.init(jax.random.PRNGKey(0)), in_sh[0])
+    opt_state = jax.device_put(AdamW(lr=args.lr).init(params), in_sh[1])
+    pipe = SyntheticPipeline(cfg, shape, seed=0)
+
+    print(f"arch={cfg.name} devices={jax.device_count()} "
+          f"mesh={dict(mesh.shape)} collective={args.collective}")
+    t_start = time.time()
+    for i in range(args.steps):
+        batch = jax.device_put(
+            {k: jnp.asarray(v) for k, v in pipe.batch_at(i).items()},
+            in_sh[2])
+        t0 = time.time()
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        if i % args.log_every == 0:
+            print(f"step {i:4d} loss {loss:.4f} "
+                  f"({(time.time() - t0) * 1e3:.0f} ms)", flush=True)
+    print(f"done: {args.steps} steps in {time.time() - t_start:.1f}s")
+
+    if args.ckpt:
+        save(args.ckpt, {"params": params, "opt": opt_state},
+             step=args.steps, extra={"arch": cfg.name})
+        print("checkpoint ->", args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,199 @@
+"""Whisper-style encoder-decoder transformer backbone.
+
+The mel-spectrogram + conv feature extractor is a STUB per the brief: the
+model consumes precomputed frame embeddings ``audio`` of shape
+(B, encoder_seq, d_model). LayerNorm (scale+bias), learned positions, GELU
+MLPs — the whisper recipe.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+def _ln(nl, d, dtype):
+    shape = (d,) if nl is None else (nl, d)
+    return {"scale": jnp.ones(shape, dtype), "bias": jnp.zeros(shape, dtype)}
+
+
+def _apply_ln(x, p, eps):
+    return L.layer_norm(x, p["scale"], p["bias"], eps)
+
+
+def cross_attention_params(key, cfg: ModelConfig, layers, dtype):
+    return L.attention_params(key, cfg, layers=layers, dtype=dtype)
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32):
+    ke, kenc, kdec, kx, kp = L.split_keys(key, 5)
+    ne, nd = cfg.encoder_layers, cfg.num_layers
+    d = cfg.d_model
+    ka1, ka2 = jax.random.split(kenc)
+    kd1, kd2 = jax.random.split(kdec)
+    return {
+        "embed": L.embed_params(ke, cfg, dtype),  # includes decoder "pos"
+        "enc_pos": L.dense_init(kp, (cfg.encoder_seq, d), d, dtype),
+        "encoder": {
+            "attn": L.attention_params(ka1, cfg, layers=ne, dtype=dtype),
+            "mlp": L.mlp_params(ka2, d, cfg.d_ff, layers=ne, gated=False,
+                                dtype=dtype),
+            "ln1": _ln(ne, d, dtype),
+            "ln2": _ln(ne, d, dtype),
+        },
+        "enc_final": _ln(None, d, dtype),
+        "decoder": {
+            "self_attn": L.attention_params(kd1, cfg, layers=nd, dtype=dtype),
+            "cross_attn": cross_attention_params(kx, cfg, layers=nd,
+                                                 dtype=dtype),
+            "mlp": L.mlp_params(kd2, d, cfg.d_ff, layers=nd, gated=False,
+                                dtype=dtype),
+            "ln1": _ln(nd, d, dtype),
+            "ln2": _ln(nd, d, dtype),
+            "ln3": _ln(nd, d, dtype),
+        },
+    }
+
+
+def _cross_attn(x, p, kv, cfg, compute_dtype):
+    """x: (B,S,d); kv: precomputed {"k","v"}: (B,T,H,Dh) from encoder."""
+    cd = compute_dtype
+    q = jnp.einsum("bsd,dhk->bshk", x.astype(cd), p["wq"].astype(cd))
+    from repro.kernels import ops
+    out = ops.attention(q, kv["k"], kv["v"], causal=False, impl="xla")
+    return jnp.einsum("bshk,hkd->bsd", out.astype(cd), p["wo"].astype(cd))
+
+
+def _cross_kv(enc_out, p, compute_dtype):
+    cd = compute_dtype
+    k = jnp.einsum("btd,dhk->bthk", enc_out.astype(cd), p["wk"].astype(cd))
+    v = jnp.einsum("btd,dhk->bthk", enc_out.astype(cd), p["wv"].astype(cd))
+    return {"k": k, "v": v}
+
+
+def encode(params, audio, cfg: ModelConfig, *, compute_dtype=jnp.bfloat16,
+           attn_impl="auto", remat: bool = False, unroll: bool = False):
+    cd = compute_dtype
+    Senc = audio.shape[1]
+    x = audio.astype(cd) + params["enc_pos"][None, :Senc].astype(cd)
+    positions = jnp.arange(Senc)
+
+    def body(x, lp):
+        h = _apply_ln(x, lp["ln1"], cfg.norm_eps)
+        attn, _ = L.attention_block(h, lp["attn"], cfg, positions,
+                                    causal=False, compute_dtype=cd,
+                                    attn_impl=attn_impl)
+        x = x + attn
+        h = _apply_ln(x, lp["ln2"], cfg.norm_eps)
+        x = x + L.mlp_block(h, lp["mlp"], gated=False, compute_dtype=cd)
+        from repro.parallel.sharding import constrain_residual
+        return constrain_residual(x), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = L.layer_scan(body, x, params["encoder"], unroll=unroll)
+    return _apply_ln(x, params["enc_final"], cfg.norm_eps)
+
+
+def decode_train(params, tokens, enc_out, cfg: ModelConfig, *,
+                 compute_dtype=jnp.bfloat16, attn_impl="auto",
+                 remat: bool = False, unroll: bool = False):
+    cd = compute_dtype
+    B, S = tokens.shape
+    pos_tab = params["embed"]["pos"]
+    x = params["embed"]["tok"].astype(cd)[tokens] + \
+        pos_tab[jnp.arange(S) % pos_tab.shape[0]].astype(cd)[None]
+    positions = jnp.arange(S)
+
+    def body(x, lp):
+        h = _apply_ln(x, lp["ln1"], cfg.norm_eps)
+        attn, _ = L.attention_block(h, lp["self_attn"], cfg, positions,
+                                    causal=True, compute_dtype=cd,
+                                    attn_impl=attn_impl)
+        x = x + attn
+        h = _apply_ln(x, lp["ln2"], cfg.norm_eps)
+        kv = _cross_kv(enc_out, lp["cross_attn"], cd)
+        x = x + _cross_attn(h, lp["cross_attn"], kv, cfg, cd)
+        h = _apply_ln(x, lp["ln3"], cfg.norm_eps)
+        x = x + L.mlp_block(h, lp["mlp"], gated=False, compute_dtype=cd)
+        from repro.parallel.sharding import constrain_residual
+        return constrain_residual(x), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = L.layer_scan(body, x, params["decoder"], unroll=unroll)
+    return x
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, compute_dtype=jnp.bfloat16,
+            attn_impl="auto", remat=False, unroll=False, loss_chunk=512,
+            **_):
+    enc = encode(params, batch["audio"], cfg, compute_dtype=compute_dtype,
+                 attn_impl=attn_impl, remat=remat, unroll=unroll)
+    h = decode_train(params, batch["tokens"], enc, cfg,
+                     compute_dtype=compute_dtype, attn_impl=attn_impl,
+                     remat=remat, unroll=unroll)
+    loss = L.lm_head_loss(h, params["embed"], batch["labels"], cfg,
+                          compute_dtype=compute_dtype, chunk=loss_chunk)
+    return loss, {}
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               dtype=jnp.bfloat16):
+    nd, H, KV, Dh = (cfg.num_layers, cfg.num_heads, cfg.num_kv_heads,
+                     cfg.resolved_head_dim)
+    return {
+        "k": jnp.zeros((nd, batch, cache_len, KV, Dh), dtype),
+        "v": jnp.zeros((nd, batch, cache_len, KV, Dh), dtype),
+        # cross-attention KV is computed once from the encoder at prefill
+        "xk": jnp.zeros((nd, batch, cfg.encoder_seq, H, Dh), dtype),
+        "xv": jnp.zeros((nd, batch, cfg.encoder_seq, H, Dh), dtype),
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+def prime_cross(params, audio, cfg: ModelConfig, cache, *,
+                compute_dtype=jnp.bfloat16, attn_impl="auto"):
+    """Encode audio and fill the cross-attention KV entries of the cache."""
+    enc = encode(params, audio, cfg, compute_dtype=compute_dtype,
+                 attn_impl=attn_impl)
+
+    def per_layer(lp):
+        kv = _cross_kv(enc, lp["cross_attn"], compute_dtype)
+        return kv["k"].astype(jnp.bfloat16), kv["v"].astype(jnp.bfloat16)
+
+    xk, xv = jax.lax.map(per_layer, params["decoder"])
+    return {**cache, "xk": xk, "xv": xv}
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig, *,
+                compute_dtype=jnp.bfloat16, unroll: bool = False, **_):
+    cd = compute_dtype
+    length = cache["length"]
+    pos_tab = params["embed"]["pos"]
+    x = params["embed"]["tok"].astype(cd)[tokens] + \
+        pos_tab[length % pos_tab.shape[0]].astype(cd)[None, None]
+    positions = length[None]
+
+    def body(x, xs):
+        lp, ck, cv, xk, xv = xs
+        h = _apply_ln(x, lp["ln1"], cfg.norm_eps)
+        kvc = {"k": ck, "v": cv, "length": length}
+        attn, nkv = L.attention_block(h, lp["self_attn"], cfg, positions,
+                                      causal=True, kv_cache=kvc,
+                                      compute_dtype=cd, attn_impl="ref")
+        x = x + attn
+        h = _apply_ln(x, lp["ln2"], cfg.norm_eps)
+        x = x + _cross_attn(h, lp["cross_attn"], {"k": xk, "v": xv}, cfg, cd)
+        h = _apply_ln(x, lp["ln3"], cfg.norm_eps)
+        x = x + L.mlp_block(h, lp["mlp"], gated=False, compute_dtype=cd)
+        return x, (nkv["k"], nkv["v"])
+
+    x, (nk, nv) = L.layer_scan(
+        body, x, (params["decoder"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]), unroll=unroll)
+    logits = T.logits_fn(params, x, cfg, cd)[:, 0]
+    return logits, {**cache, "k": nk, "v": nv, "length": length + 1}

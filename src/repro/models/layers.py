@@ -1,0 +1,356 @@
+"""Shared model building blocks (pure-functional, pytree params).
+
+All layers are plain functions over parameter pytrees so they compose with
+``lax.scan`` over stacked per-layer parameters (small HLO, fast compiles at
+40+ layers) and with pjit/shard_map distribution.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+
+Params = dict
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+def dense_init(key, shape, in_axis_size=None, dtype=jnp.float32):
+    fan_in = in_axis_size if in_axis_size is not None else shape[0]
+    std = fan_in ** -0.5
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+def split_keys(key, n):
+    return list(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# layer stacking
+# ---------------------------------------------------------------------------
+def layer_scan(body, carry, xs, *, unroll: bool = False):
+    """lax.scan over stacked layer params, or a literal python unroll.
+
+    The unrolled form exists for the dry-run's cost accounting: XLA's
+    HloCostAnalysis counts a while-loop body ONCE regardless of trip count,
+    so scanned models under-report flops/bytes/collective traffic by ~L x.
+    The dry-run lowers an unrolled variant at two small depths and
+    extrapolates (launch/dryrun.py).
+    """
+    if not unroll:
+        return jax.lax.scan(body, carry, xs)
+    L = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(L):
+        carry, y = body(carry, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    if all(y is None for y in ys):
+        return carry, None
+    stacked = jax.tree.map(lambda *leaves: jnp.stack(leaves), *ys)
+    return carry, stacked
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (full or partial — GLM-family "2d"/half rotary)
+# ---------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, rotary_pct: float, theta: float):
+    rot_dim = int(head_dim * rotary_pct)
+    rot_dim -= rot_dim % 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
+    return inv, rot_dim
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, *, rotary_pct: float = 1.0,
+               theta: float = 10000.0) -> jax.Array:
+    """x: (B, S, H, D); positions: (S,) or (B, S)."""
+    D = x.shape[-1]
+    inv, rot_dim = rope_frequencies(D, rotary_pct, theta)
+    if rot_dim == 0:
+        return x
+    pos = positions.astype(jnp.float32)
+    if pos.ndim == 1:
+        pos = pos[None, :]
+    ang = pos[..., None] * inv[None, None, :]          # (B, S, rot/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    xr = x[..., :rot_dim].astype(jnp.float32)
+    x1, x2 = xr[..., ::2], xr[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x1 * sin + x2 * cos
+    rot = jnp.stack([y1, y2], axis=-1).reshape(xr.shape)
+    out = jnp.concatenate([rot.astype(x.dtype), x[..., rot_dim:]], axis=-1)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block
+# ---------------------------------------------------------------------------
+def attention_params(key, cfg: ModelConfig, layers: Optional[int] = None,
+                     dtype=jnp.float32) -> Params:
+    """Stacked attention params; ``layers=None`` -> unstacked single block."""
+    d, H, KV, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ks = split_keys(key, 4)
+    lead = () if layers is None else (layers,)
+
+    def mk(k, shape, fan_in):
+        if layers is None:
+            return dense_init(k, shape, fan_in, dtype)
+        return jax.vmap(lambda kk: dense_init(kk, shape, fan_in, dtype))(
+            jax.random.split(k, layers))
+
+    p = {
+        "wq": mk(ks[0], (d, H, Dh), d),
+        "wk": mk(ks[1], (d, KV, Dh), d),
+        "wv": mk(ks[2], (d, KV, Dh), d),
+        "wo": mk(ks[3], (H, Dh, d), H * Dh),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros(lead + (H, Dh), dtype)
+        p["bk"] = jnp.zeros(lead + (KV, Dh), dtype)
+        p["bv"] = jnp.zeros(lead + (KV, Dh), dtype)
+    return p
+
+
+def attention_block(
+    x: jax.Array,                 # (B, S, d)
+    p: Params,
+    cfg: ModelConfig,
+    positions: jax.Array,         # (S,) absolute positions of x
+    *,
+    causal: bool = True,
+    window: int = 0,
+    kv_cache=None,                # optional dict(k=(B,T,KV,Dh), v=..., length)
+    return_kv: bool = False,      # prefill: return this block's k/v for caching
+    compute_dtype=jnp.bfloat16,
+    attn_impl: str = "auto",
+):
+    """Returns (out, new_kv) — new_kv is None unless kv_cache/return_kv given."""
+    cd = compute_dtype
+    q = jnp.einsum("bsd,dhk->bshk", x.astype(cd), p["wq"].astype(cd))
+    k = jnp.einsum("bsd,dhk->bshk", x.astype(cd), p["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhk->bshk", x.astype(cd), p["wv"].astype(cd))
+    if "bq" in p:
+        q = q + p["bq"].astype(cd)
+        k = k + p["bk"].astype(cd)
+        v = v + p["bv"].astype(cd)
+    if not cfg.learned_pos and cfg.num_heads:
+        q = apply_rope(q, positions, rotary_pct=cfg.rotary_pct, theta=cfg.rope_theta)
+        k = apply_rope(k, positions, rotary_pct=cfg.rotary_pct, theta=cfg.rope_theta)
+
+    new_kv = None
+    if kv_cache is not None:
+        # decode: insert this step's k/v at slot `length % T` (ring-buffer when
+        # T < full context, i.e. sliding-window serving)
+        T = kv_cache["k"].shape[1]
+        slot = kv_cache["length"] % T
+        cache_dt = kv_cache["k"].dtype
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            kv_cache["k"], k.astype(cache_dt), slot, 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            kv_cache["v"], v.astype(cache_dt), slot, 1)
+        new_len = kv_cache["length"] + x.shape[1]
+        new_kv = {"k": ck, "v": cv, "length": new_len}
+        slot_pos = ring_slot_positions(new_len, T)
+        out = cache_attention(q, ck, cv, positions, slot_pos, window=window)
+    else:
+        out = ops.attention(q, k, v, causal=causal, window=window,
+                            impl=attn_impl)
+        if return_kv:
+            new_kv = {"k": k, "v": v}
+    out = jnp.einsum("bshk,hkd->bsd", out.astype(cd), p["wo"].astype(cd))
+    return out.astype(x.dtype), new_kv
+
+
+def ring_slot_positions(length, T: int):
+    """Absolute position stored in each ring-buffer slot after `length` writes.
+
+    Slot i holds the greatest position p < length with p % T == i, or -1 if
+    slot i has never been written.
+    """
+    i = jnp.arange(T)
+    last = i + T * ((length - 1 - i) // T)
+    return jnp.where(i < length, last, -1)
+
+
+def cache_attention(q, ck, cv, q_pos, slot_pos, *, window=0):
+    """Decode attention against a (possibly ring-buffered) KV cache.
+
+    q: (B, 1, H, Dh); ck/cv: (B, T, KV, Dh); q_pos: (1,) absolute;
+    slot_pos: (T,) absolute position stored in each slot (-1 = empty).
+
+    GQA is expressed by reshaping q to (KV, group) — the cache is NEVER
+    repeated or up-cast: a bf16 cache stays bf16 on the wire and in HBM
+    (an f32 copy here becomes a multi-GB hoisted all-gather in the lowered
+    decode step), with fp32 accumulation via preferred_element_type.
+    """
+    B, S, H, Dh = q.shape
+    KV = ck.shape[2]
+    group = H // KV
+    qr = (q * (Dh ** -0.5)).reshape(B, S, KV, group, Dh).astype(ck.dtype)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qr, ck,
+                        preferred_element_type=jnp.float32)
+    valid = (slot_pos >= 0) & (slot_pos <= q_pos[0])
+    if window > 0:
+        valid &= slot_pos > q_pos[0] - window
+    logits = jnp.where(valid[None, None, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs.astype(cv.dtype), cv,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, S, H, Dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def mlp_params(key, d: int, ff: int, layers: Optional[int] = None,
+               gated: bool = True, dtype=jnp.float32) -> Params:
+    ks = split_keys(key, 3)
+
+    def mk(k, shape, fan_in):
+        if layers is None:
+            return dense_init(k, shape, fan_in, dtype)
+        return jax.vmap(lambda kk: dense_init(kk, shape, fan_in, dtype))(
+            jax.random.split(k, layers))
+
+    p = {"w_up": mk(ks[1], (d, ff), d), "w_down": mk(ks[2], (ff, d), ff)}
+    if gated:
+        p["w_gate"] = mk(ks[0], (d, ff), d)
+    return p
+
+
+def mlp_block(x: jax.Array, p: Params, *, gated: bool = True,
+              compute_dtype=jnp.bfloat16) -> jax.Array:
+    cd = compute_dtype
+    up = jnp.einsum("bsd,df->bsf", x.astype(cd), p["w_up"].astype(cd))
+    if gated:
+        gate = jnp.einsum("bsd,df->bsf", x.astype(cd), p["w_gate"].astype(cd))
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    out = jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(cd))
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / unembedding / loss
+# ---------------------------------------------------------------------------
+def pad_vocab(v: int, mult: int = 256) -> int:
+    """Megatron-style vocab padding so the unembedding shards over the model
+    axis even for awkward tokenizer sizes (whisper's 51866, mamba's 50280)."""
+    return ((v + mult - 1) // mult) * mult
+
+
+def embed_params(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = split_keys(key, 3)
+    vp = pad_vocab(cfg.vocab_size)
+    p = {
+        "tok": dense_init(k1, (vp, cfg.d_model), cfg.d_model, dtype),
+        "out": dense_init(k2, (cfg.d_model, vp), cfg.d_model, dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if cfg.learned_pos:
+        p["pos"] = dense_init(k3, (cfg.max_positions, cfg.d_model),
+                              cfg.d_model, dtype)
+    return p
+
+
+def unembed(x: jax.Array, p: Params, cfg: ModelConfig,
+            compute_dtype=jnp.bfloat16) -> jax.Array:
+    from repro.parallel.sharding import constrain_logits
+    x = rms_norm(x, p["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x.astype(compute_dtype),
+                        p["out"].astype(compute_dtype))
+    # mask padded vocab columns so softmax/argmax never pick them
+    V = cfg.vocab_size
+    if logits.shape[-1] != V:
+        col = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                       logits.ndim - 1)
+        logits = jnp.where(col < V, logits, -1e30)
+    return constrain_logits(logits)
+
+
+def lm_head_loss(hidden: jax.Array, p: Params, labels: jax.Array,
+                 cfg: ModelConfig, *, compute_dtype=jnp.bfloat16,
+                 chunk: int = 512) -> jax.Array:
+    """Fused final-norm + unembed + CE, chunked over the sequence with
+    rematerialization — the (tokens x vocab) logits tensor never exists at
+    more than ``chunk`` rows per device."""
+    from repro.parallel.sharding import constrain_logits
+    x = rms_norm(hidden, p["final_norm"], cfg.norm_eps)
+    B, S, d = x.shape
+    c = min(chunk, S)
+    pad = (-S) % c
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    nc = x.shape[1] // c
+    xc = jnp.moveaxis(x.reshape(B, nc, c, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(B, nc, c), 1, 0)
+    V = cfg.vocab_size
+    w = p["out"].astype(compute_dtype)
+
+    @jax.checkpoint
+    def body(args):
+        xi, li = args
+        logits = jnp.einsum("bsd,dv->bsv", xi.astype(compute_dtype), w)
+        if logits.shape[-1] != V:
+            col = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+            logits = jnp.where(col < V, logits, -1e30)
+        logits = constrain_logits(logits)
+        lf = logits.astype(jnp.float32)
+        m = jax.lax.stop_gradient(lf.max(axis=-1, keepdims=True))
+        lse = jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1)) + m[..., 0]
+        onehot = li[..., None] == jax.lax.broadcasted_iota(
+            jnp.int32, lf.shape, 2)
+        picked = jnp.sum(jnp.where(onehot, lf, 0.0), axis=-1)
+        mask = ((li >= 0) & (li < V)).astype(jnp.float32)
+        return jnp.sum((lse - picked) * mask), jnp.sum(mask)
+
+    nlls, cnts = jax.lax.map(body, (xc, lc))
+    return jnp.sum(nlls) / jnp.maximum(jnp.sum(cnts), 1.0)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  ignore: int = -1) -> jax.Array:
+    """Mean token NLL; positions with label==ignore are masked out.
+
+    Written as reductions over the vocab axis (max / exp-sum / masked-sum)
+    rather than take_along_axis so a vocab-sharded logits tensor stays
+    sharded (Megatron vocab-parallel CE under SPMD).
+    """
+    lf = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(lf.max(axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1)) + m[..., 0]
+    V = logits.shape[-1]
+    onehot = labels[..., None] == jax.lax.broadcasted_iota(
+        jnp.int32, lf.shape, lf.ndim - 1)
+    picked = jnp.sum(jnp.where(onehot, lf, 0.0), axis=-1)
+    nll = lse - picked
+    mask = (labels != ignore) & (labels >= 0) & (labels < V)
+    maskf = mask.astype(jnp.float32)
+    return jnp.sum(nll * maskf) / jnp.maximum(jnp.sum(maskf), 1.0)

@@ -1,0 +1,131 @@
+"""MoE decoder LM (olmoe / arctic families): GQA attention + MoE FFN.
+
+``ep_axis`` threads expert parallelism down to the shard_map'd MoE block;
+``None`` runs the single-device path (smoke tests).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.moe import moe_block, moe_params
+
+LB_COEF = 0.01
+Z_COEF = 0.001
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32):
+    ke, ka, km = L.split_keys(key, 3)
+    nl = cfg.num_layers
+    return {
+        "embed": L.embed_params(ke, cfg, dtype),
+        "layers": {
+            "attn": L.attention_params(ka, cfg, layers=nl, dtype=dtype),
+            "moe": moe_params(km, cfg, layers=nl, dtype=dtype),
+            "ln1": jnp.ones((nl, cfg.d_model), dtype),
+            "ln2": jnp.ones((nl, cfg.d_model), dtype),
+        },
+    }
+
+
+def _moe_apply(h, mp, cfg, *, ep_axis, mesh, compute_dtype,
+               a2a_algorithm="xla"):
+    if ep_axis is None:
+        return moe_block(h, mp, cfg, ep_axis=None, compute_dtype=compute_dtype)
+    from jax.sharding import PartitionSpec as P
+
+    dspec = P(tuple(a for a in ("pod", "data") if a in mesh.axis_names),
+              ep_axis, None)
+    espec = jax.tree.map(lambda _: P(None), mp)
+    espec["w_gate"] = espec["w_up"] = espec["w_down"] = P(ep_axis, None, None)
+
+    def inner(hh, pp):
+        out, aux = moe_block(hh, pp, cfg, ep_axis=ep_axis,
+                             a2a_algorithm=a2a_algorithm,
+                             compute_dtype=compute_dtype)
+        aux = jax.tree.map(lambda v: jax.lax.pmean(v, ep_axis), aux)
+        return out, aux
+
+    return jax.shard_map(
+        inner, mesh=mesh, in_specs=(dspec, espec),
+        out_specs=(dspec, jax.tree.map(lambda _: P(), {"lb_loss": 0,
+                                                       "z_loss": 0})),
+        check_vma=False,
+    )(h, mp)
+
+
+def _layer(x, lp, cfg, positions, *, window, kv, ep_axis, mesh,
+           compute_dtype, attn_impl, a2a_algorithm="xla", return_kv=False):
+    h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    attn, new_kv = L.attention_block(
+        h, lp["attn"], cfg, positions, causal=True, window=window,
+        kv_cache=kv, return_kv=return_kv, compute_dtype=compute_dtype,
+        attn_impl=attn_impl)
+    x = x + attn
+    h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    y, aux = _moe_apply(h, lp["moe"], cfg, ep_axis=ep_axis, mesh=mesh,
+                        compute_dtype=compute_dtype,
+                        a2a_algorithm=a2a_algorithm)
+    from repro.parallel.sharding import constrain_residual
+    return constrain_residual(x + y), new_kv, aux
+
+
+def forward(params, embeds, cfg: ModelConfig, *, window=0, ep_axis=None,
+            mesh=None, compute_dtype=jnp.bfloat16, attn_impl="auto",
+            a2a_algorithm: str = "xla", remat: bool = False,
+            unroll: bool = False):
+    S = embeds.shape[1]
+    positions = jnp.arange(S)
+
+    def body(x, lp):
+        y, _, aux = _layer(x, lp, cfg, positions, window=window, kv=None,
+                           ep_axis=ep_axis, mesh=mesh,
+                           compute_dtype=compute_dtype, attn_impl=attn_impl,
+                           a2a_algorithm=a2a_algorithm)
+        return y, aux
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, auxes = L.layer_scan(body, embeds, params["layers"], unroll=unroll)
+    aux = jax.tree.map(jnp.mean, auxes)
+    return x, aux
+
+
+def loss_fn(params, batch, cfg: ModelConfig, **kw):
+    cd = kw.get("compute_dtype", jnp.bfloat16)
+    loss_chunk = kw.pop("loss_chunk", 512)
+    x = T.embed_tokens(params, batch["tokens"], cfg, cd)
+    h, aux = forward(params, x, cfg, **kw)
+    ce = L.lm_head_loss(h, params["embed"], batch["labels"], cfg,
+                        compute_dtype=cd, chunk=loss_chunk)
+    total = ce + LB_COEF * aux["lb_loss"] + Z_COEF * aux["z_loss"]
+    return total, {"ce": ce, **aux}
+
+
+init_cache = T.init_cache
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig, *, window=0,
+                ep_axis=None, mesh=None, compute_dtype=jnp.bfloat16,
+                unroll: bool = False, **_):
+    x = T.embed_tokens(params, tokens, cfg, compute_dtype)
+    positions = cache["length"][None]
+    length = cache["length"]
+
+    def body(x, xs):
+        lp, ck, cv = xs
+        kv = {"k": ck, "v": cv, "length": length}
+        y, new_kv, _ = _layer(x, lp, cfg, positions, window=window, kv=kv,
+                              ep_axis=ep_axis, mesh=mesh,
+                              compute_dtype=compute_dtype, attn_impl="ref")
+        return y, (new_kv["k"], new_kv["v"])
+
+    x, (nk, nv) = L.layer_scan(body, x, (params["layers"], cache["k"],
+                                         cache["v"]), unroll=unroll)
+    logits = T.logits_fn(params, x, cfg, compute_dtype)[:, 0]
+    return logits, {"k": nk, "v": nv, "length": length + 1}

@@ -1,0 +1,151 @@
+"""Dense decoder-only transformer (llama/GLM/qwen family).
+
+Layers are scanned over stacked parameters (one HLO block regardless of
+depth). Also provides the decode path against stacked KV caches, used by the
+serve shapes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32):
+    ke, ka, km, kn = L.split_keys(key, 4)
+    nl = cfg.num_layers
+    return {
+        "embed": L.embed_params(ke, cfg, dtype),
+        "layers": {
+            "attn": L.attention_params(ka, cfg, layers=nl, dtype=dtype),
+            "mlp": L.mlp_params(km, cfg.d_model, cfg.d_ff, layers=nl, dtype=dtype),
+            "ln1": jnp.ones((nl, cfg.d_model), dtype),
+            "ln2": jnp.ones((nl, cfg.d_model), dtype),
+        },
+    }
+
+
+def _layer(x, lp, cfg: ModelConfig, positions, *, window, kv, compute_dtype,
+           attn_impl, return_kv=False):
+    h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    attn, new_kv = L.attention_block(
+        h, lp["attn"], cfg, positions, causal=True, window=window,
+        kv_cache=kv, return_kv=return_kv, compute_dtype=compute_dtype,
+        attn_impl=attn_impl)
+    x = x + attn
+    h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    x = x + L.mlp_block(h, lp["mlp"], gated=True, compute_dtype=compute_dtype)
+    from repro.parallel.sharding import constrain_residual
+    return constrain_residual(x), new_kv
+
+
+def forward(
+    params, embeds: jax.Array, cfg: ModelConfig, *,
+    positions: Optional[jax.Array] = None,
+    window: int = 0,
+    compute_dtype=jnp.bfloat16,
+    attn_impl: str = "auto",
+    remat: bool = False,
+    unroll: bool = False,
+):
+    """embeds: (B, S, d) already-embedded inputs. Returns final hidden (B,S,d)."""
+    S = embeds.shape[1]
+    if positions is None:
+        positions = jnp.arange(S)
+
+    def body(x, lp):
+        y, _ = _layer(x, lp, cfg, positions, window=window, kv=None,
+                      compute_dtype=compute_dtype, attn_impl=attn_impl)
+        return y, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = L.layer_scan(body, embeds, params["layers"], unroll=unroll)
+    return x
+
+
+def embed_tokens(params, tokens, cfg: ModelConfig, compute_dtype=jnp.bfloat16):
+    return params["embed"]["tok"].astype(compute_dtype)[tokens]
+
+
+def logits_fn(params, hidden, cfg: ModelConfig, compute_dtype=jnp.bfloat16):
+    return L.unembed(hidden, params["embed"], cfg, compute_dtype)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, **kw):
+    cd = kw.get("compute_dtype", jnp.bfloat16)
+    loss_chunk = kw.pop("loss_chunk", 512)
+    x = embed_tokens(params, batch["tokens"], cfg, cd)
+    h = forward(params, x, cfg, **kw)
+    loss = L.lm_head_loss(h, params["embed"], batch["labels"], cfg,
+                          compute_dtype=cd, chunk=loss_chunk)
+    return loss, {}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               dtype=jnp.bfloat16):
+    nl, KV, Dh = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((nl, batch, cache_len, KV, Dh), dtype),
+        "v": jnp.zeros((nl, batch, cache_len, KV, Dh), dtype),
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(
+    params, cache, tokens: jax.Array, cfg: ModelConfig, *,
+    window: int = 0, compute_dtype=jnp.bfloat16, unroll: bool = False,
+):
+    """tokens: (B, 1) next token ids; returns (logits (B, V), new_cache)."""
+    x = embed_tokens(params, tokens, cfg, compute_dtype)
+    positions = cache["length"][None]          # absolute position of this token
+    length = cache["length"]
+
+    def body(x, xs):
+        lp, ck, cv = xs
+        kv = {"k": ck, "v": cv, "length": length}
+        y, new_kv = _layer(x, lp, cfg, positions, window=window, kv=kv,
+                           compute_dtype=compute_dtype, attn_impl="ref")
+        return y, (new_kv["k"], new_kv["v"])
+
+    x, (nk, nv) = L.layer_scan(body, x,
+                               (params["layers"], cache["k"], cache["v"]),
+                               unroll=unroll)
+    logits = logits_fn(params, x, cfg, compute_dtype)[:, 0]
+    new_cache = {"k": nk, "v": nv, "length": length + 1}
+    return logits, new_cache
+
+
+def prefill(params, tokens, cfg: ModelConfig, cache_len: int, *,
+            window: int = 0, compute_dtype=jnp.bfloat16, attn_impl="auto"):
+    """Run the prompt, returning logits and a primed cache."""
+    B, S = tokens.shape
+    x = embed_tokens(params, tokens, cfg, compute_dtype)
+    positions = jnp.arange(S)
+
+    def body(x, lp):
+        y, kv = _layer(x, lp, cfg, positions, window=window, kv=None,
+                       compute_dtype=compute_dtype, attn_impl=attn_impl,
+                       return_kv=True)
+        return y, (kv["k"].astype(compute_dtype), kv["v"].astype(compute_dtype))
+
+    x, (ks, vs) = L.layer_scan(body, x, params["layers"])
+    logits = logits_fn(params, x, cfg, compute_dtype)
+    # place the prompt at the head of a cache_len cache
+    pad = cache_len - S
+    assert pad >= 0
+    widths = [(0, 0), (0, 0), (0, pad), (0, 0), (0, 0)]
+    cache = {
+        "k": jnp.pad(ks, widths),
+        "v": jnp.pad(vs, widths),
+        "length": jnp.asarray(S, jnp.int32),
+    }
+    return logits, cache

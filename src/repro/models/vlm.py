@@ -1,0 +1,62 @@
+"""LLaVA-NeXT-style VLM: a dense decoder LM consuming precomputed anyres
+patch embeddings (vision tower + projector stubbed per the brief).
+
+Sequence layout: [patch embeddings (num_patches) | text tokens]. Labels over
+image positions are ignored (-1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+
+init_params = T.init_params
+init_cache = T.init_cache
+decode_step = T.decode_step  # decoding past the prefix is pure-text
+
+
+def assemble_embeds(params, batch, cfg: ModelConfig, compute_dtype):
+    """Concatenate patch embeddings with text token embeddings."""
+    patches = batch["patches"].astype(compute_dtype)     # (B, P, d)
+    text = T.embed_tokens(params, batch["tokens"], cfg, compute_dtype)
+    return jnp.concatenate([patches, text], axis=1)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, *, window=0,
+            compute_dtype=jnp.bfloat16, attn_impl="auto", remat=False,
+            unroll=False, loss_chunk=512, **_):
+    x = assemble_embeds(params, batch, cfg, compute_dtype)
+    h = T.forward(params, x, cfg, window=window, compute_dtype=compute_dtype,
+                  attn_impl=attn_impl, remat=remat, unroll=unroll)
+    # labels: (B, P + S_text); image positions must be -1 (ignored)
+    loss = L.lm_head_loss(h, params["embed"], batch["labels"], cfg,
+                          compute_dtype=compute_dtype, chunk=loss_chunk)
+    return loss, {}
+
+
+def prefill(params, batch, cfg: ModelConfig, cache_len: int, *, window=0,
+            compute_dtype=jnp.bfloat16, attn_impl="auto"):
+    """Prefill over [patches | prompt tokens]."""
+    x = assemble_embeds(params, batch, cfg, compute_dtype)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+
+    def body(h, lp):
+        y, kv = T._layer(h, lp, cfg, positions, window=window, kv=None,
+                         compute_dtype=compute_dtype, attn_impl=attn_impl,
+                         return_kv=True)
+        return y, (kv["k"].astype(compute_dtype), kv["v"].astype(compute_dtype))
+
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    logits = T.logits_fn(params, x, cfg, compute_dtype)
+    pad = cache_len - S
+    assert pad >= 0
+    cache = {
+        "k": jnp.pad(ks, [(0, 0), (0, 0), (0, pad), (0, 0), (0, 0)]),
+        "v": jnp.pad(vs, [(0, 0), (0, 0), (0, pad), (0, 0), (0, 0)]),
+        "length": jnp.asarray(S, jnp.int32),
+    }
+    return logits, cache

@@ -1,0 +1,2 @@
+from repro.optim.adamw import AdamW, AdamWState, global_norm
+from repro.optim.schedule import constant, cosine_with_warmup

@@ -1,0 +1,99 @@
+"""Validate every collective algorithm against the XLA oracle on N simulated
+CPU devices. Run as a subprocess (sets device count before importing jax).
+Prints one line per case: OK/FAIL op algo shape dtype maxerr. Exit 1 on any FAIL.
+"""
+import os, sys
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+import numpy as np
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, AxisType
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+from repro.core.collectives import algorithms as alg
+
+P_DEV = jax.device_count()
+mesh = jax.make_mesh((P_DEV,), ("x",), axis_types=(AxisType.Auto,))
+
+def run(fn, x, out_specs=None):
+    return jax.jit(jax.shard_map(
+        fn, mesh=mesh, in_specs=P(None),
+        out_specs=out_specs if out_specs is not None else P(None),
+        check_vma=False))(x)
+
+def per_rank(fn, xs, out_specs=P("x")):
+    """xs: (p, ...) distinct per-rank inputs."""
+    return jax.jit(jax.shard_map(
+        fn, mesh=mesh, in_specs=P("x"), out_specs=out_specs,
+        check_vma=False))(xs)
+
+fails = []
+def check(name, got, want, tol=2e-5):
+    err = float(jnp.max(jnp.abs(got.astype(jnp.float32) - want.astype(jnp.float32))))
+    ok = err <= tol
+    print(("OK  " if ok else "FAIL"), name, "err=%.3g" % err)
+    if not ok:
+        fails.append(name)
+
+rng = np.random.default_rng(0)
+p = P_DEV
+
+for dtype in (jnp.float32, jnp.bfloat16):
+    tol = 2e-5 if dtype == jnp.float32 else 0.11
+    for n in (64, 1000, 4096):
+        xs = jnp.asarray(rng.normal(size=(p, n)), dtype)   # per-rank rows
+        # ---- all_reduce: every rank contributes row r ----
+        want = jnp.broadcast_to(xs.astype(jnp.float32).sum(0, keepdims=True), (p, n))
+        for name in alg.ALGORITHMS["all_reduce"]:
+            for segs in ((1, 2) if name == "ring" else (1,)):
+                f = lambda xr, _name=name, _s=segs: alg.get("all_reduce", _name)(
+                    xr[0], "x", p, op="add", segments=_s)[None]
+                got = per_rank(f, xs)
+                check(f"all_reduce/{name}/segs{segs}/{n}/{dtype.__name__}", got, want, tol)
+        # ---- reduce_scatter ----
+        pad = (-n) % p
+        fullsum = jnp.pad(xs.astype(jnp.float32).sum(0), (0, pad)).reshape(p, -1)
+        for name in alg.ALGORITHMS["reduce_scatter"]:
+            f = lambda xr, _name=name: alg.get("reduce_scatter", _name)(
+                xr[0], "x", p, op="add")[None]
+            got = per_rank(f, xs)   # (p, n/p): row r = rank r's shard
+            check(f"reduce_scatter/{name}/{n}/{dtype.__name__}", got, fullsum, tol)
+        # ---- all_gather ----
+        want_ag = jnp.broadcast_to(xs.reshape(1, p * n), (p, p * n))
+        for name in alg.ALGORITHMS["all_gather"]:
+            f = lambda xr, _name=name: alg.get("all_gather", _name)(
+                xr[0], "x", p)[None]
+            got = per_rank(f, xs)
+            check(f"all_gather/{name}/{n}/{dtype.__name__}", got, want_ag, tol)
+        # ---- broadcast ----
+        want_bc = jnp.broadcast_to(xs[0:1].astype(jnp.float32), (p, n))
+        for name in alg.ALGORITHMS["broadcast"]:
+            for segs in ((1, 4) if name == "chain" else (1,)):
+                f = lambda xr, _name=name, _s=segs: alg.get("broadcast", _name)(
+                    xr[0], "x", p, segments=_s)[None]
+                got = per_rank(f, xs)
+                check(f"broadcast/{name}/segs{segs}/{n}/{dtype.__name__}", got, want_bc, tol)
+        # ---- all_to_all: input rows (p, n//p...) use n divisible ----
+        if n % p == 0:
+            xs3 = jnp.asarray(rng.normal(size=(p, p, n // p)), dtype)
+            want_a2a = jnp.swapaxes(xs3, 0, 1)   # out[r, j] = in[j, r]
+            for name in alg.ALGORITHMS["all_to_all"]:
+                f = lambda xr, _name=name: alg.get("all_to_all", _name)(
+                    xr[0], "x", p)[None]
+                got = per_rank(f, xs3.reshape(p, p * (n // p)))
+                check(f"all_to_all/{name}/{n}/{dtype.__name__}", got.reshape(p, p, n // p),
+                      want_a2a, tol)
+    # ---- reduce (valid at root only) ----
+    xs = jnp.asarray(rng.normal(size=(p, 128)), dtype)
+    f = lambda xr: alg.reduce_binomial(xr[0], "x", p, op="add")[None]
+    got = per_rank(f, xs)
+    check(f"reduce/binomial/root/{dtype.__name__}", got[0],
+          xs.astype(jnp.float32).sum(0), tol)
+
+# barrier completes
+for name in alg.ALGORITHMS["barrier"]:
+    f = lambda xr, _name=name: alg.get("barrier", _name)("x", p)[None]
+    got = per_rank(f, jnp.zeros((p, 1)))
+    print("OK  barrier/" + name, "val=", got[0, 0])
+
+print("FAILS:", len(fails))
+sys.exit(1 if fails else 0)

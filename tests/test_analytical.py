@@ -1,0 +1,124 @@
+"""Analytical model layer: formulas, closed-form optimal segments (Table 3),
+parameter fitting recovery, model family selection."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.analytical import (
+    DEFAULT_HOCKNEY,
+    DEFAULT_LOGGP,
+    Hockney,
+    LogGP,
+    best_algorithm,
+    collective_cost,
+    default_plogp,
+    fit_hockney,
+    fit_loggp,
+    fit_plogp,
+    numeric_optimal_segments,
+    optimal_segment_size,
+    prediction_error,
+    select_best_model,
+)
+
+
+def test_hockney_p2p_linear():
+    m = Hockney(alpha=1e-6, beta=2e-11)
+    assert m.p2p(0) == pytest.approx(1e-6)
+    assert m.p2p(1e9) == pytest.approx(1e-6 + 0.02, rel=1e-3)
+
+
+def test_ring_cost_matches_formula():
+    """Table 3: Ring + Hockney = 2(P-1)(a + b m/P) + (P-1) g m/P."""
+    mdl = Hockney(alpha=1e-6, beta=2e-11)
+    p, m, gamma = 8, 1 << 20, 2.5e-12
+    want = (2 * (p - 1) * (mdl.alpha + mdl.beta * m / p)
+            + (p - 1) * gamma * (m / p))
+    got = collective_cost("all_reduce", "ring", mdl, p, m, gamma=gamma)
+    assert got == pytest.approx(want, rel=1e-6)
+
+
+def test_recursive_doubling_cost():
+    mdl = Hockney(alpha=1e-6, beta=2e-11)
+    p, m, gamma = 16, 4096, 2.5e-12
+    want = 4 * (mdl.p2p(m) + gamma * m)
+    got = collective_cost("all_reduce", "recursive_doubling", mdl, p, m,
+                          gamma=gamma)
+    assert got == pytest.approx(want, rel=1e-6)
+
+
+def test_optimal_segment_closed_form_matches_numeric():
+    """The Table-3 derivative formula m_s* = sqrt(m a / ((P-2)(b+g))) must
+    sit at the minimum of the exact Table-3 time expression (dense numeric
+    minimization over m_s)."""
+    from repro.core.analytical import table3_ring_segmented_time
+    mdl = DEFAULT_HOCKNEY
+    p, m, gamma = 16, 64 << 20, 2.5e-12
+    ms_star = optimal_segment_size("all_reduce", "ring", mdl, p, m,
+                                   gamma=gamma)
+    assert ms_star is not None and ms_star > 0
+    grid = np.geomspace(64, m, 4000)
+    times = [table3_ring_segmented_time(mdl, p, m, ms, gamma=gamma)
+             for ms in grid]
+    ms_numeric = grid[int(np.argmin(times))]
+    assert abs(math.log2(ms_star / ms_numeric)) < 0.1
+    # and the closed form beats the unsegmented transfer
+    t_star = table3_ring_segmented_time(mdl, p, m, ms_star, gamma=gamma)
+    t_unseg = table3_ring_segmented_time(mdl, p, m, m / p, gamma=gamma)
+    assert t_star <= t_unseg
+
+
+def test_selection_structure_small_vs_large():
+    """Small messages -> logarithmic algorithms; large -> bandwidth-optimal
+    (survey Table 2 structure)."""
+    mdl = DEFAULT_HOCKNEY
+    a_small, _, _ = best_algorithm("all_reduce", mdl, 16, 1024)
+    a_large, _, _ = best_algorithm("all_reduce", mdl, 16, 64 << 20)
+    assert a_small in ("recursive_doubling", "reduce_bcast",
+                       "allgather_reduce")
+    assert a_large in ("ring", "rabenseifner")
+    b_small, _, _ = best_algorithm("broadcast", mdl, 16, 1024)
+    b_large, _, _ = best_algorithm("broadcast", mdl, 16, 64 << 20)
+    assert b_small == "binomial"
+    # all three large-message winners are pipelined/scatter-based (Table 2)
+    assert b_large in ("chain", "van_de_geijn", "pipelined_binary")
+
+
+def test_fit_hockney_recovers_parameters():
+    true = Hockney(alpha=2.3e-6, beta=3.1e-11)
+    sizes = np.geomspace(64, 1 << 24, 30)
+    times = [true.p2p(m) for m in sizes]
+    fit = fit_hockney(sizes, times)
+    assert fit.alpha == pytest.approx(true.alpha, rel=1e-3)
+    assert fit.beta == pytest.approx(true.beta, rel=1e-3)
+
+
+def test_fit_plogp_beats_hockney_on_nonlinear_data():
+    """§3.1.2: linear models underestimate nonlinear networks; PLogP wins."""
+    rng = np.random.default_rng(0)
+    sizes = np.geomspace(64, 1 << 24, 120)
+    # strongly super-linear small-message cost (packetization knee)
+    times = np.array([1e-6 + 3e-6 * np.log2(max(m / 64, 1))
+                      + m * 2e-11 for m in sizes])
+    half = len(sizes) // 2
+    idx = rng.permutation(len(sizes))
+    tr, ho = idx[:half], idx[half:]
+    model, errs = select_best_model(sizes[tr], times[tr], sizes[ho],
+                                    times[ho])
+    assert errs["plogp"] <= errs["hockney"]
+    assert model.name == min(errs, key=errs.get)
+
+
+def test_numeric_optimal_segments_sane():
+    mdl = DEFAULT_HOCKNEY
+    ns_small = numeric_optimal_segments("all_reduce", "ring", mdl, 16, 1024)
+    ns_large = numeric_optimal_segments("all_reduce", "ring", mdl, 16,
+                                        256 << 20)
+    assert ns_small <= ns_large
+
+
+def test_loggp_vs_hockney_order():
+    # same bandwidth term; both positive and ordered by message size
+    for mdl in (DEFAULT_HOCKNEY, DEFAULT_LOGGP, default_plogp()):
+        assert mdl.p2p(1 << 20) > mdl.p2p(1 << 10) > 0

@@ -1,0 +1,32 @@
+"""Collective algorithm correctness vs XLA oracles.
+
+The algorithms need >1 device; jax locks the host device count at first
+init, so the sweep runs in a subprocess with
+``--xla_force_host_platform_device_count=8`` (never set globally).
+"""
+import os
+import subprocess
+import sys
+
+HERE = os.path.dirname(__file__)
+SRC = os.path.join(HERE, "..", "src")
+
+
+def _run(script, env_extra=None, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.update(env_extra or {})
+    return subprocess.run([sys.executable, script], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+
+
+def test_all_algorithms_match_oracles_8dev():
+    r = _run(os.path.join(HERE, "helpers", "validate_collectives.py"))
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout[-4000:]}\nERR:\n{r.stderr[-2000:]}"
+    assert "FAILS: 0" in r.stdout
+
+
+def test_all_algorithms_match_oracles_4dev():
+    r = _run(os.path.join(HERE, "helpers", "validate_collectives.py"),
+             {"XLA_FLAGS": "--xla_force_host_platform_device_count=4"})
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout[-4000:]}\nERR:\n{r.stderr[-2000:]}"

@@ -1,0 +1,149 @@
+"""Serving correctness: token-by-token decode through the KV cache must
+reproduce the full-context forward pass (teacher forcing equivalence)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import hybrid, ssm, transformer as T
+from repro.models.layers import pad_vocab
+
+KEY = jax.random.PRNGKey(42)
+
+
+def _greedy_full(cfg, params, tokens):
+    """Logits at every position from a single full forward."""
+    x = T.embed_tokens(params, tokens, cfg, jnp.float32)
+    h = T.forward(params, x, cfg, compute_dtype=jnp.float32,
+                  attn_impl="ref")
+    return T.logits_fn(params, h, cfg, jnp.float32)
+
+
+def test_dense_decode_matches_full_forward():
+    cfg = get_config("smollm-135m").reduced()
+    params = T.init_params(KEY, cfg)
+    B, S = 2, 12
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    full = _greedy_full(cfg, params, tokens)
+
+    cache = T.init_cache(cfg, B, S, dtype=jnp.float32)
+    step = jax.jit(lambda p, c, t: T.decode_step(
+        p, c, t, cfg, compute_dtype=jnp.float32))
+    for i in range(S):
+        logits, cache = step(params, cache, tokens[:, i:i + 1])
+        np.testing.assert_allclose(np.asarray(logits),
+                                   np.asarray(full[:, i]), atol=2e-3,
+                                   rtol=2e-3)
+
+
+def test_dense_prefill_then_decode_matches():
+    cfg = get_config("qwen2.5-3b").reduced()
+    params = T.init_params(KEY, cfg)
+    B, S, P = 2, 16, 10
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    full = _greedy_full(cfg, params, tokens)
+
+    logits_p, cache = T.prefill(params, tokens[:, :P], cfg, cache_len=S,
+                                compute_dtype=jnp.float32, attn_impl="ref")
+    np.testing.assert_allclose(np.asarray(logits_p[:, -1]),
+                               np.asarray(full[:, P - 1]), atol=2e-3,
+                               rtol=2e-3)
+    for i in range(P, S):
+        logits, cache = T.decode_step(params, cache, tokens[:, i:i + 1],
+                                      cfg, compute_dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(logits),
+                                   np.asarray(full[:, i]), atol=2e-3,
+                                   rtol=2e-3)
+
+
+def test_sliding_window_ring_buffer_decode():
+    """Windowed decode with a ring-buffer cache == full-context forward with
+    the same window mask."""
+    cfg = get_config("smollm-135m").reduced()
+    W = 8
+    params = T.init_params(KEY, cfg)
+    B, S = 1, 20
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    x = T.embed_tokens(params, tokens, cfg, jnp.float32)
+    h = T.forward(params, x, cfg, window=W, compute_dtype=jnp.float32,
+                  attn_impl="ref")
+    full = T.logits_fn(params, h, cfg, jnp.float32)
+
+    cache = T.init_cache(cfg, B, W, dtype=jnp.float32)   # ring buffer size W
+    for i in range(S):
+        logits, cache = T.decode_step(params, cache, tokens[:, i:i + 1],
+                                      cfg, window=W,
+                                      compute_dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(logits),
+                                   np.asarray(full[:, i]), atol=3e-3,
+                                   rtol=3e-3, err_msg=f"pos {i}")
+
+
+def test_ssm_decode_matches_full_forward():
+    cfg = get_config("mamba2-130m").reduced()
+    params = ssm.init_params(KEY, cfg)
+    B, S = 2, 16
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    x = T.embed_tokens(params, tokens, cfg, jnp.float32)
+    h = ssm.forward(params, x, cfg, compute_dtype=jnp.float32,
+                    ssd_impl="ref")
+    full = T.logits_fn(params, h, cfg, jnp.float32)
+
+    cache = ssm.init_cache(cfg, B, 0)
+    cache = jax.tree.map(lambda a: a.astype(jnp.float32), cache)
+    for i in range(S):
+        logits, cache = ssm.decode_step(params, cache, tokens[:, i:i + 1],
+                                        cfg, compute_dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(logits),
+                                   np.asarray(full[:, i]), atol=3e-3,
+                                   rtol=3e-3, err_msg=f"pos {i}")
+
+
+def test_hybrid_decode_matches_full_forward():
+    cfg = get_config("zamba2-2.7b").reduced()
+    params = hybrid.init_params(KEY, cfg)
+    B, S = 1, 10
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    x = T.embed_tokens(params, tokens, cfg, jnp.float32)
+    h = hybrid.forward(params, x, cfg, compute_dtype=jnp.float32,
+                       ssd_impl="ref", attn_impl="ref")
+    full = T.logits_fn(params, h, cfg, jnp.float32)
+
+    cache = hybrid.init_cache(cfg, B, S, dtype=jnp.float32)
+    cache["ssm"] = jax.tree.map(lambda a: a.astype(jnp.float32),
+                                cache["ssm"])
+    for i in range(S):
+        logits, cache = hybrid.decode_step(params, cache,
+                                           tokens[:, i:i + 1], cfg,
+                                           compute_dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(logits),
+                                   np.asarray(full[:, i]), atol=5e-3,
+                                   rtol=5e-3, err_msg=f"pos {i}")
+
+
+def test_encdec_decode_matches_teacher_forcing():
+    from repro.models import encdec
+    cfg = get_config("whisper-large-v3").reduced()
+    params = encdec.init_params(KEY, cfg)
+    B, S = 1, 8
+    audio = jax.random.normal(KEY, (B, cfg.encoder_seq, cfg.d_model))
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    enc = encdec.encode(params, audio, cfg, compute_dtype=jnp.float32,
+                        attn_impl="ref")
+    h = encdec.decode_train(params, tokens, enc, cfg,
+                            compute_dtype=jnp.float32, attn_impl="ref")
+    full = T.logits_fn(params, h, cfg, jnp.float32)
+
+    cache = encdec.init_cache(cfg, B, S, dtype=jnp.float32)
+    cache = encdec.prime_cross(params, audio, cfg, cache,
+                               compute_dtype=jnp.float32, attn_impl="ref")
+    cache = {k: (v.astype(jnp.float32) if hasattr(v, "astype") and
+                 v.dtype == jnp.bfloat16 else v) for k, v in cache.items()}
+    for i in range(S):
+        logits, cache = encdec.decode_step(params, cache,
+                                           tokens[:, i:i + 1], cfg,
+                                           compute_dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(logits),
+                                   np.asarray(full[:, i]), atol=5e-3,
+                                   rtol=5e-3, err_msg=f"pos {i}")

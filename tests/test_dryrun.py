@@ -1,0 +1,49 @@
+"""Dry-run smoke: one (arch x shape) must lower+compile on the production
+mesh (512 host devices) in a subprocess, producing the roofline record;
+the multi-pod mesh must also compile. Full 40-combo sweeps live in
+experiments/ (run via ``python -m repro.launch.dryrun --all``)."""
+import json
+import os
+import subprocess
+import sys
+
+HERE = os.path.dirname(__file__)
+SRC = os.path.join(HERE, "..", "src")
+
+
+def _dryrun(tmp, *args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)      # the entrypoint sets its own
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--out", tmp, *args],
+        env=env, capture_output=True, text=True, timeout=1200,
+        cwd=os.path.join(HERE, ".."))
+
+
+def test_dryrun_single_pod_decode(tmp_path):
+    r = _dryrun(str(tmp_path), "--arch", "smollm-135m", "--shape",
+                "decode_32k")
+    assert r.returncode == 0, r.stdout + r.stderr
+    rec = json.load(open(tmp_path / "smollm-135m_decode_32k_16x16_xla.json"))
+    assert rec["status"] == "ok"
+    roof = rec["roofline"]
+    assert roof["dominant"] in ("compute", "memory", "collective")
+    assert roof["flops_per_device"] > 0
+    assert rec["cost"]["units"] == 30          # loop-corrected accounting
+
+
+def test_dryrun_multipod_train(tmp_path):
+    r = _dryrun(str(tmp_path), "--arch", "smollm-135m", "--shape",
+                "train_4k", "--multipod")
+    assert r.returncode == 0, r.stdout + r.stderr
+    rec = json.load(open(tmp_path / "smollm-135m_train_4k_2x16x16_xla.json"))
+    assert rec["status"] == "ok"
+    assert rec["mesh"] == "2x16x16"
+
+
+def test_dryrun_whisper_long_context_skip(tmp_path):
+    r = _dryrun(str(tmp_path), "--arch", "whisper-large-v3", "--shape",
+                "long_500k")
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "skip" in r.stdout

@@ -1,0 +1,71 @@
+"""Roofline-term extraction: HLO collective-bytes parser and term math."""
+import pytest
+
+from repro.configs import ARCHITECTURES, SHAPES
+from repro.launch import hlo_analysis as ha
+
+HLO = """
+ENTRY %main {
+  %p0 = f32[8,128]{1,0} parameter(0)
+  %ag = f32[64,128]{1,0} all-gather(%p0), dimensions={0}
+  %ar = bf16[1024]{0} all-reduce(%x), to_apply=%add
+  %ars = f32[4,4]{1,0} all-reduce-start(%y)
+  %ard = f32[4,4]{1,0} all-reduce-done(%ars)
+  %cp = bf16[2,256]{1,0} collective-permute(%z), source_target_pairs={{0,1}}
+  %a2a = s32[16,16]{1,0} all-to-all(%w)
+  %rs = f32[8]{0} reduce-scatter(%v), dimensions={0}
+  %dot = f32[8,8]{1,0} dot(%a, %b)
+}
+"""
+
+
+def test_collective_bytes_parser():
+    out = ha.collective_bytes(HLO)
+    assert out["all-gather"] == 64 * 128 * 4
+    # all-reduce: plain + -start counted, -done skipped
+    assert out["all-reduce"] == 1024 * 2 + 4 * 4 * 4
+    assert out["collective-permute"] == 2 * 256 * 2
+    assert out["all-to-all"] == 16 * 16 * 4
+    assert out["reduce-scatter"] == 8 * 4
+    assert out["count"] == 6
+
+
+def test_roofline_terms_and_dominant():
+    cost = {"flops": 197e12, "bytes accessed": 819e9 / 2}
+    coll = {"all-gather": int(50e9 * 2), "all-reduce": 0, "reduce-scatter": 0,
+            "all-to-all": 0, "collective-permute": 0, "count": 1}
+    r = ha.roofline(cost, coll, chips=256, model_flops_global=197e12 * 256)
+    assert r.compute_s == pytest.approx(1.0)
+    assert r.memory_s == pytest.approx(0.5)
+    assert r.collective_s == pytest.approx(2.0)
+    assert r.dominant == "collective"
+    assert r.useful_ratio == pytest.approx(1.0)
+
+
+def test_model_flops_shapes():
+    cfg = ARCHITECTURES["glm4-9b"]
+    train = ha.model_flops(cfg, SHAPES["train_4k"])
+    prefill = ha.model_flops(cfg, SHAPES["prefill_32k"])
+    decode = ha.model_flops(cfg, SHAPES["decode_32k"])
+    # same token count -> train = 3x prefill (fwd+bwd); decode tiny
+    assert train == pytest.approx(3 * prefill)
+    assert decode < prefill / 1000
+
+
+def test_param_count_sanity():
+    # analytic counts should land within 20% of the checkpoint names
+    approx = {
+        "glm4-9b": 9.4e9, "smollm-135m": 135e6, "qwen2.5-3b": 3.1e9,
+        "llava-next-mistral-7b": 7.2e9, "mamba2-130m": 130e6,
+        "arctic-480b": 482e9, "whisper-large-v3": 1.5e9,
+    }
+    for name, want in approx.items():
+        got = ha.param_count(ARCHITECTURES[name])
+        assert abs(got - want) / want < 0.35, (name, got, want)
+
+
+def test_moe_active_params_much_smaller():
+    cfg = ARCHITECTURES["arctic-480b"]
+    full = ha.param_count(cfg)
+    active = ha.param_count(cfg, active_only=True)
+    assert active < full / 10

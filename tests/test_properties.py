@@ -1,0 +1,115 @@
+"""Hypothesis property tests on system invariants."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.analytical import DEFAULT_HOCKNEY, Hockney, collective_cost
+from repro.core.tuning.quadtree import build_quadtree, query, tree_stats
+from repro.models.layers import pad_vocab, ring_slot_positions
+from repro.models.moe import _dispatch_indices
+
+
+# ---------------------------------------------------------------------------
+# quad tree: exact encode/decode round-trip on arbitrary decision grids
+# ---------------------------------------------------------------------------
+@given(st.integers(1, 4), st.integers(0, 6), st.integers(0, 10 ** 9))
+@settings(max_examples=40, deadline=None)
+def test_quadtree_exact_roundtrip(k, n_labels, seed):
+    size = 2 ** k
+    rng = np.random.default_rng(seed)
+    grid = rng.integers(0, n_labels + 1, size=(size, size)).astype(np.int32)
+    tree = build_quadtree(grid)
+    for i in range(size):
+        for j in range(size):
+            label, depth = query(tree, i, j, size)
+            assert label == grid[i, j]
+            assert depth <= k
+
+
+@given(st.integers(1, 4), st.integers(0, 10 ** 9), st.integers(0, 3))
+@settings(max_examples=30, deadline=None)
+def test_quadtree_depth_limit_respected(k, seed, max_depth):
+    size = 2 ** k
+    rng = np.random.default_rng(seed)
+    grid = rng.integers(0, 5, size=(size, size)).astype(np.int32)
+    tree = build_quadtree(grid, max_depth=max_depth)
+    assert tree_stats(tree)["max_depth"] <= max_depth
+
+
+# ---------------------------------------------------------------------------
+# cost model invariants
+# ---------------------------------------------------------------------------
+@given(st.sampled_from([2, 4, 8, 16, 32]),
+       st.integers(8, 1 << 26), st.integers(8, 1 << 26))
+@settings(max_examples=60, deadline=None)
+def test_cost_monotone_in_message_size(p, m1, m2):
+    lo, hi = sorted((m1, m2))
+    for algo in ("ring", "recursive_doubling", "rabenseifner"):
+        c_lo = collective_cost("all_reduce", algo, DEFAULT_HOCKNEY, p, lo)
+        c_hi = collective_cost("all_reduce", algo, DEFAULT_HOCKNEY, p, hi)
+        assert c_hi >= c_lo
+
+
+@given(st.floats(1e-8, 1e-4), st.floats(1e-12, 1e-9),
+       st.integers(8, 1 << 24))
+@settings(max_examples=60, deadline=None)
+def test_hockney_positive_and_linear(alpha, beta, m):
+    mdl = Hockney(alpha=alpha, beta=beta)
+    assert mdl.p2p(m) > 0
+    assert mdl.p2p(2 * m) <= 2 * mdl.p2p(m) + alpha
+
+
+# ---------------------------------------------------------------------------
+# ring-buffer KV cache slot positions
+# ---------------------------------------------------------------------------
+@given(st.integers(1, 64), st.integers(0, 200))
+@settings(max_examples=60, deadline=None)
+def test_ring_slot_positions_invariants(T, length):
+    pos = np.asarray(ring_slot_positions(jnp.asarray(length), T))
+    for i, p in enumerate(pos):
+        if length <= i:
+            assert p == -1
+        else:
+            assert p % T == i          # slot congruence
+            assert p < length          # only written positions
+            assert p >= max(0, length - T)  # newest occupant of the slot
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch conservation
+# ---------------------------------------------------------------------------
+@given(st.integers(2, 32), st.integers(1, 4), st.sampled_from([4, 8, 16]),
+       st.integers(0, 10 ** 9))
+@settings(max_examples=40, deadline=None)
+def test_moe_dispatch_capacity_and_conservation(T, k, E, seed):
+    k = min(k, E)
+    rng = np.random.default_rng(seed)
+    experts = jnp.asarray(rng.integers(0, E, size=(T, k)))
+    gates = jnp.asarray(rng.uniform(0.1, 1.0, size=(T, k)), jnp.float32)
+    C = max(1, (T * k) // E)
+    gather_idx, slot_gate, slot_token = jax.jit(
+        _dispatch_indices, static_argnums=(2, 3))(experts, gates, E, C)
+    gather_idx = np.asarray(gather_idx)
+    slot_token = np.asarray(slot_token)
+    slot_gate = np.asarray(slot_gate)
+    # capacity respected by construction (shapes)
+    assert gather_idx.shape == (E * C,)
+    # every real slot's gather index equals its destination token
+    real = slot_token < T
+    np.testing.assert_array_equal(gather_idx[real], slot_token[real])
+    # kept assignments never exceed capacity per expert
+    for e in range(E):
+        taken = real[e * C:(e + 1) * C].sum()
+        assert taken <= C
+    # gates on real slots are positive
+    assert (slot_gate[real] > 0).all()
+
+
+@given(st.integers(1, 1_000_000))
+@settings(max_examples=50, deadline=None)
+def test_pad_vocab_properties(v):
+    vp = pad_vocab(v)
+    assert vp >= v and vp % 256 == 0 and vp - v < 256

@@ -1,0 +1,70 @@
+"""End-to-end behaviour: full training loop (pipeline -> train step ->
+checkpoint -> resume) improves loss; distributed integration via the
+8-device subprocess (tuned gradient sync == XLA, MoE expert parallel,
+per-family mini dry-runs)."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.data import SyntheticPipeline
+from repro.models.registry import build_model
+from repro.optim import AdamW
+
+HERE = os.path.dirname(__file__)
+SRC = os.path.join(HERE, "..", "src")
+
+
+def test_training_reduces_loss_and_resumes(tmp_path):
+    cfg = get_config("smollm-135m").reduced().replace(vocab_size=256)
+    shape = ShapeConfig(name="tiny", seq_len=32, global_batch=4,
+                        kind="train")
+    api = build_model(cfg, compute_dtype=jnp.float32, attn_impl="ref")
+    opt = AdamW(lr=3e-3)
+    params = api.init(jax.random.PRNGKey(0))
+    opt_state = opt.init(params)
+    pipe = SyntheticPipeline(cfg, shape, seed=0)
+
+    @jax.jit
+    def step(params, opt_state, batch):
+        (loss, _), grads = jax.value_and_grad(api.loss, has_aux=True)(
+            params, batch)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    losses = []
+    for i in range(30):
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(i).items()}
+        params, opt_state, loss = step(params, opt_state, batch)
+        losses.append(float(loss))
+    # hash-random tokens: learnable down to the unigram entropy; early >> late
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.1, losses
+
+    # checkpoint -> resume continuity
+    from repro.checkpoint import restore, save
+    path = str(tmp_path / "ck")
+    save(path, {"params": params, "opt": opt_state}, step=30)
+    restored, step_no, _ = restore(path, {"params": params,
+                                          "opt": opt_state})
+    assert step_no == 30
+    b = {k: jnp.asarray(v) for k, v in pipe.batch_at(30).items()}
+    _, _, l_orig = step(params, opt_state, b)
+    _, _, l_rest = step(restored["params"], restored["opt"], b)
+    assert float(l_orig) == float(l_rest)
+
+
+def test_distributed_integration_8dev():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    r = subprocess.run(
+        [sys.executable, os.path.join(HERE, "helpers",
+                                      "validate_distributed.py")],
+        env=env, capture_output=True, text=True, timeout=1800)
+    assert r.returncode == 0, \
+        f"STDOUT:\n{r.stdout[-5000:]}\nERR:\n{r.stderr[-3000:]}"
+    assert "FAILS: 0" in r.stdout

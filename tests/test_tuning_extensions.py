@@ -1,0 +1,128 @@
+"""Extensions beyond the core tuning stack: ANN predictor (§3.4.3),
+rule-based feedback control (§3.4.5), oct-tree 3-d decision maps (§3.3.2)."""
+import numpy as np
+import pytest
+
+from repro.core.tuning import (
+    BenchmarkExecutor,
+    NetworkProfile,
+    NetworkSimulator,
+    SimulatorBackend,
+    methods_for,
+)
+from repro.core.tuning.ann import ANNSelector, fit_mlp
+from repro.core.tuning.decision import mean_penalty
+from repro.core.tuning.exhaustive import tune_exhaustive
+from repro.core.tuning.feedback import FeedbackController, default_rule_table
+from repro.core.tuning.octree import OctreeDecision, build_octree, query, \
+    tree_stats
+from repro.core.tuning.regression import expand_features
+from repro.core.tuning.space import Point
+
+OPS = ("all_reduce", "broadcast")
+PS = (4, 16, 64)
+MS = tuple(1024 * 4 ** i for i in range(6))
+PTS = [Point(o, p, m) for o in OPS for p in PS for m in MS]
+
+
+@pytest.fixture(scope="module")
+def sim():
+    return NetworkSimulator(NetworkProfile(seed=13))
+
+
+@pytest.fixture(scope="module")
+def tuned(sim):
+    ex = BenchmarkExecutor(SimulatorBackend(sim), trials=3)
+    return tune_exhaustive(ex, OPS, PS, MS)
+
+
+def test_mlp_fits_smooth_function():
+    rng = np.random.default_rng(0)
+    X = np.stack([expand_features(p, m, 1)
+                  for p in (4, 8, 16, 32, 64)
+                  for m in np.geomspace(1024, 1 << 24, 24)])
+    # target: a Hockney-like surface
+    y = np.array([1e-6 * np.log2(x[3] + 2) + x[5] * 2e-11 for x in X])
+    mlp = fit_mlp(X, y, epochs=1500, seed=1)
+    pred = mlp.predict(X)
+    rel = np.abs(pred - y) / y
+    assert np.median(rel) < 0.15
+
+
+def test_ann_selector_low_penalty(sim, tuned):
+    """§3.4.3: the 10-hidden-neuron sigmoid MLP reaches high selection
+    accuracy (survey reports up to 95% of max gain)."""
+    _, ds, _ = tuned
+    ann = ANNSelector.fit(ds, epochs=600, seed=0)
+    pen = mean_penalty(ann.decide, sim, PTS)
+    assert pen < 0.15
+    # 90%-of-max-gain metric
+    tot = poss = 0.0
+    for pt in PTS:
+        ts = [sim.expected_time(pt.op, me.algorithm, pt.p, pt.m, me.segments)
+              for me in methods_for(pt.op, include_xla=False)]
+        ch = ann.decide(pt.op, pt.p, pt.m)
+        t_sel = sim.expected_time(pt.op, ch.algorithm, pt.p, pt.m,
+                                  ch.segments)
+        poss += max(ts) - min(ts)
+        tot += max(ts) - t_sel
+    assert tot / poss >= 0.85
+
+
+def test_feedback_controller_improves_rule_table(sim):
+    """§3.4.5: no offline training — the rule table self-revises toward the
+    per-context optimum from runtime feedback alone."""
+    fc = FeedbackController(window=24, epsilon=0.3, seed=3)
+    op, p, m = "all_reduce", 16, 1 << 22        # large message bucket
+    # initial terminal for large_msg is 'ring'; if another method is truly
+    # better on this network, the controller must discover it
+    for _ in range(400):
+        meth = fc.select(op, p, m)
+        t = sim.measure(op, meth.algorithm, p, m, meth.segments)[0]
+        fc.record(t)
+    rule = [r for r in fc.tables[op] if r.predicate(op, p, m)][0]
+    best, t_best = sim.optimal(op, p, m, methods_for(op, include_xla=False))
+    t_rule = sim.expected_time(op, rule.terminal.algorithm, p, m,
+                               rule.terminal.segments)
+    assert t_rule <= 1.15 * t_best
+
+
+def test_feedback_static_rules_limitation():
+    """§3.4.6 'Static rule set' limitation: predicates never change — a
+    boundary in the wrong place cannot be learned, only terminals can."""
+    table = default_rule_table("all_reduce")
+    names_before = [r.name for r in table]
+    fc = FeedbackController()
+    fc.tables["all_reduce"] = table
+    assert [r.name for r in fc.tables["all_reduce"]] == names_before
+
+
+def test_octree_exact_roundtrip(tuned):
+    table, _, _ = tuned
+    oc = OctreeDecision.fit(table, OPS)
+    for (op, p, m), meth in table.table.items():
+        assert oc.decide(op, p, m) == meth
+
+
+def test_octree_handles_3d_where_quadtree_cannot(sim, tuned):
+    """§3.3.2: one tree over (op, p, m) — penalties comparable to per-op
+    quad trees, single structure."""
+    table, _, _ = tuned
+    oc = OctreeDecision.fit(table, OPS, max_depth=3)
+    pen = mean_penalty(oc.decide, sim, PTS)
+    assert pen < 0.12
+    st = oc.stats()
+    assert st["max_depth"] <= 3
+
+
+def test_octree_depth_limit_property():
+    rng = np.random.default_rng(0)
+    cube = rng.integers(0, 5, size=(8, 8, 8)).astype(np.int32)
+    t = build_octree(cube)
+    for i in range(8):
+        for j in range(8):
+            for k in range(8):
+                label, d = query(t, i, j, k, 8)
+                assert label == cube[i, j, k]
+    t2 = build_octree(cube, max_depth=1)
+    assert tree_stats(t2)["max_depth"] <= 1
