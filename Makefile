@@ -1,0 +1,23 @@
+# Developer entry points.
+#
+#   make check  - fast tier: skips the `slow` marks (multi-device subprocess
+#                 sweeps, 512-device dry-runs, CLI launchers, per-token
+#                 decode roundtrips). With the persistent XLA compile cache
+#                 below, repeat runs land around a minute on a 2-core box
+#                 (first run pays cold compiles, ~2 min).
+#   make test   - the full tier-1 suite (~8 min).
+#   make bench  - every benchmark table (CSV to stdout).
+PY ?= python
+export JAX_COMPILATION_CACHE_DIR ?= $(CURDIR)/.jax_cache
+export JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS ?= 0
+
+.PHONY: check test bench
+
+check:
+	PYTHONPATH=src $(PY) -m pytest -q -m "not slow"
+
+test:
+	PYTHONPATH=src $(PY) -m pytest -q
+
+bench:
+	PYTHONPATH=src:. $(PY) benchmarks/run.py

@@ -14,6 +14,7 @@ from benchmarks import (
     quadtree_encoding,
     roofline_report,
     star_adaptation,
+    tuner_budget,
     umtac_pipeline,
 )
 
@@ -25,6 +26,7 @@ SUITES = {
     "decision_tree_pruning": decision_tree_pruning,   # §3.4.1
     "umtac_pipeline": umtac_pipeline,                 # §5
     "star_adaptation": star_adaptation,               # §3.2.3
+    "tuner_budget": tuner_budget,                     # unified pipeline cost
     "overlap": overlap,                               # §4.1
     "kernel_bench": kernel_bench,                     # kernels layer
     "roofline_report": roofline_report,               # dry-run artifacts

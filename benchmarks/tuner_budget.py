@@ -1,0 +1,63 @@
+"""Unified-pipeline cost axis: per-tuner measurement budget vs achieved
+penalty, through one TuningSession.
+
+Two framings of the survey's central trade-off:
+
+  * cold — every tuner pays for its own probes (separate sessions): the
+    "months of brute force" regime the survey warns about;
+  * shared — all tuners run in ONE session with the measurement cache
+    (the pipeline's fix): everything after the first sweep is nearly free.
+
+Derived fields: new experiments, cache hits, and the true-simulator mean
+penalty of the resulting DecisionTable.
+"""
+from repro.core.tuning import (
+    NetworkProfile,
+    NetworkSimulator,
+    SimulatorBackend,
+    TuningSession,
+    make_tuner,
+)
+from repro.core.tuning.decision import mean_penalty
+from repro.core.tuning.space import Point
+
+from benchmarks.common import row
+
+OPS = ("all_reduce", "all_gather", "broadcast")
+PS = (4, 16, 64)
+MS = tuple(1024 * 4 ** i for i in range(6))
+PTS = [Point(o, p, m) for o in OPS for p in PS for m in MS]
+
+NAMES = ("exhaustive", "thinned", "smgd", "regression", "ann",
+         "decision_tree", "quadtree", "octree", "star", "feedback")
+
+
+def _session():
+    return TuningSession(
+        SimulatorBackend(NetworkSimulator(NetworkProfile(seed=11))),
+        trials=3)
+
+
+def run():
+    # cold: each tuner alone in a fresh session
+    sim_eval = NetworkSimulator(NetworkProfile(seed=11))
+    cold_total = 0
+    for name in NAMES:
+        sess = _session()
+        rep = sess.fit_all([make_tuner(name, OPS, PS, MS)])[0]
+        cold_total += rep.n_experiments
+        pen = mean_penalty(rep.table.decide, sim_eval, PTS)
+        row(f"budget/cold/{name}", rep.fit_seconds * 1e6,
+            f"experiments={rep.n_experiments};penalty_pct={pen * 100:.2f}")
+
+    # shared: one session, one cache
+    sess = _session()
+    reports = sess.fit_all([make_tuner(n, OPS, PS, MS) for n in NAMES])
+    for rep in reports:
+        pen = mean_penalty(rep.table.decide, sim_eval, PTS)
+        row(f"budget/shared/{rep.name}", rep.fit_seconds * 1e6,
+            f"experiments={rep.n_experiments};hits={rep.cache_hits};"
+            f"penalty_pct={pen * 100:.2f}")
+    total = sum(r.n_experiments for r in reports)
+    row("budget/shared/total_experiments", float(total),
+        f"vs_cold_sum={cold_total}")

@@ -1,55 +1,74 @@
-"""The paper end-to-end: tune collective {algorithm, segment size} with every
-method family from the survey, compare their decisions and penalties, and
-emit a DecisionTable the trainer can consume via --decision.
+"""The paper end-to-end, through the unified autotuning pipeline:
+
+  1. a TuningSession runs every tuner family from the survey over the same
+     simulator grid, deduplicating measurements in the shared cache (the
+     learning/compressor tuners ride the exhaustive sweep's probes for free);
+  2. each tuner is scored on the survey's two axes — measurement budget
+     (n_experiments) and achieved mean penalty;
+  3. the best DecisionTable is persisted as a versioned JSON artifact with
+     full provenance (tuner, grid, backend profile);
+  4. the trainer consumes it:  python -m repro.launch.train --tuning-table
+     tuned_decision.json  routes every gradient all-reduce through the tuned
+     {algorithm, segments} for its message size.
+
+Also demonstrates warm start (re-fitting from the saved measurement cache
+costs zero new experiments) and drift-aware re-tuning (§3.2.3).
 
 Run:  PYTHONPATH=src python examples/autotune_collectives.py
 """
 from repro.core.tuning import (
-    BenchmarkExecutor,
     NetworkProfile,
     NetworkSimulator,
     SimulatorBackend,
+    TuningSession,
+    drifted,
+    make_tuner,
 )
-from repro.core.tuning.decision import mean_penalty
-from repro.core.tuning.decision_tree import DTreeDecision
-from repro.core.tuning.exhaustive import tune_exhaustive
-from repro.core.tuning.quadtree import QuadTreeDecision
-from repro.core.tuning.regression import RegressionSelector
-from repro.core.tuning.space import Point
-from repro.core.tuning.umtac import UMTAC, KernelProfile
 
 OPS = ("all_reduce", "all_gather", "all_to_all")
 PS = (4, 16, 64, 256)
 MS = tuple(1024 * 4 ** i for i in range(7))
-PTS = [Point(o, p, m) for o in OPS for p in PS for m in MS]
+
+TUNER_NAMES = ("exhaustive", "thinned", "smgd", "regression", "ann",
+               "ensemble", "decision_tree", "quadtree", "octree", "star",
+               "feedback")
 
 if __name__ == "__main__":
     sim = NetworkSimulator(NetworkProfile(seed=0))
-    ex = BenchmarkExecutor(SimulatorBackend(sim), trials=3)
-    table, ds, n = tune_exhaustive(ex, OPS, PS, MS)
-    print(f"AEOS exhaustive: {n} experiments")
+    session = TuningSession(SimulatorBackend(sim), trials=3)
 
-    rows = [("empirical(AEOS)", lambda o, p, m: table.decide(o, p, m)),
-            ("quadtree(d<=3)", QuadTreeDecision.fit(table, OPS,
-                                                    max_depth=3).decide),
-            ("decision-tree", DTreeDecision.fit(table, OPS).decide),
-            ("regression(L1)", RegressionSelector.fit(ds, iters=800).decide)]
-    print(f"{'method':16s} {'mean penalty':>12s}")
-    for name, decide in rows:
-        pen = mean_penalty(decide, sim, PTS)
-        print(f"{name:16s} {pen * 100:11.2f}%")
+    print("== fit all tuner families over one shared measurement cache ==")
+    reports = session.fit_all([make_tuner(n, OPS, PS, MS)
+                               for n in TUNER_NAMES])
+    print(f"{'tuner':14s} {'new exps':>9s} {'cache hits':>11s} "
+          f"{'penalty':>8s}")
+    for r in reports:
+        print(f"{r.name:14s} {r.n_experiments:9d} {r.cache_hits:11d} "
+              f"{r.penalty * 100:7.2f}%")
 
-    # UMTAC over a model-shaped kernel profile
-    um = UMTAC(BenchmarkExecutor(SimulatorBackend(sim), trials=3))
-    res = um.run([KernelProfile("embed_grad", "all_reduce", 4 << 20),
-                  KernelProfile("layer_grad", "all_reduce", 64 << 10),
-                  KernelProfile("moe_a2a", "all_to_all", 8 << 20)],
-                 p=16, ms=MS)
-    print(f"UMTAC: validated={res.validated} "
-          f"holdout_err={res.holdout_err:.3f}")
-    for kname, (meth, t) in res.kernel_estimates.items():
-        print(f"  {kname:12s} -> {meth.algorithm:20s} segs={meth.segments} "
-              f"est {t * 1e6:.1f} us/step")
-    res.decision.save("tuned_decision.json")
+    best = TuningSession.best(reports)
+    best.table.save("tuned_decision.json")
+    print(f"\nbest tuner: {best.name} "
+          f"({best.n_experiments} experiments, "
+          f"{best.penalty * 100:.2f}% penalty)")
     print("decision table -> tuned_decision.json "
-          "(use: python -m repro.launch.train --decision tuned_decision.json)")
+          "(use: python -m repro.launch.train --tuning-table "
+          "tuned_decision.json)")
+
+    # warm start: a new session from the saved cache re-fits for free
+    session.save_measurements("tuned_measurements.json")
+    warm = TuningSession(SimulatorBackend(sim), trials=3)
+    warm.load_measurements("tuned_measurements.json")
+    warm.fit_all([make_tuner("regression", OPS, PS, MS)])
+    print(f"\nwarm start: regression re-fit cost {warm.n_experiments} new "
+          f"experiments ({warm.cache_hits} cache hits)")
+
+    # drift: bandwidth collapses 3x -> sentinel probes detect it, cache is
+    # dropped, and the next fit re-measures the changed fabric
+    warm.backend = SimulatorBackend(
+        NetworkSimulator(drifted(sim.profile, byte_time_mult=3.0)))
+    retuned = warm.retune_if_drifted(threshold=0.2)
+    rep = warm.fit_all([make_tuner("exhaustive", OPS, PS, MS)])[0]
+    print(f"drift detected={retuned}; re-tune ran {rep.n_experiments} new "
+          f"experiments, penalty {rep.penalty * 100:.2f}% on the drifted "
+          f"fabric")

@@ -9,25 +9,28 @@ Run:  PYTHONPATH=src python examples/measure_real_collectives.py
 import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
-from repro.core.tuning.decision import DecisionTable
-from repro.core.tuning.executor import BenchmarkExecutor, DeviceBackend
-from repro.core.tuning.space import Method, Point
+from repro.core.tuning import TuningSession, make_tuner
+from repro.core.tuning.executor import DeviceBackend
 
 if __name__ == "__main__":
     backend = DeviceBackend()
-    ex = BenchmarkExecutor(backend, trials=3)
+    session = TuningSession(backend, trials=3)
     ops = ("all_reduce", "broadcast")
     ms = (4096, 262144, 4 << 20)
 
-    ds = ex.run_grid(ops, (backend.p,), ms)
-    best = ds.best()
-    table = DecisionTable({k: meth for k, (meth, _) in best.items()})
+    # the same pipeline as the simulator path: the empirical penalty is
+    # computed from the measured dataset itself (no oracle needed)
+    rep = session.fit_all([make_tuner("exhaustive", ops, (backend.p,),
+                                      ms)])[0]
+    best = session.dataset().best()
 
-    print(f"measured {len(ds)} samples on {backend.p} devices "
-          f"({ex.n_experiments} experiments)")
+    print(f"measured {len(session)} samples on {backend.p} devices "
+          f"({rep.n_experiments} experiments, "
+          f"penalty {rep.penalty * 100:.2f}%)")
     print(f"{'op':12s} {'bytes':>9s} {'winner':>22s} {'us':>9s}")
     for (op, p, m), (meth, t) in sorted(best.items()):
         print(f"{op:12s} {m:9d} {meth.algorithm:>18s}/s{meth.segments} "
               f"{t * 1e6:9.1f}")
-    table.save("device_measured_decision.json")
-    print("-> device_measured_decision.json")
+    rep.table.save("device_measured_decision.json")
+    print("-> device_measured_decision.json "
+          f"(backend={rep.table.meta.backend})")

@@ -9,7 +9,10 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import TYPE_CHECKING, Optional, Union
+
+if TYPE_CHECKING:
+    from repro.core.tuning.decision import DecisionTable
 
 
 @dataclass(frozen=True)
@@ -142,13 +145,14 @@ class CollectiveConfig:
     hardcoded default in the survey); otherwise one of the registered
     shard_map algorithm names ("ring", "recursive_halving", ...).
     segment_bytes: 0 = unsegmented.
-    decision: optional path to a serialized DecisionFunction that
-    overrides the static fields per (op, bytes, axis size).
+    decision: optional tuned DecisionTable that overrides the static fields
+    per (op, bytes, axis size) — either a path to the serialized JSON
+    artifact or an already-loaded DecisionTable instance.
     """
 
     algorithm: str = "xla"
     segment_bytes: int = 0
-    decision: Optional[str] = None
+    decision: Optional[Union[str, "DecisionTable"]] = None
     a2a_algorithm: str = "xla"     # MoE expert-dispatch all-to-all algorithm
     overlap_microbatches: int = 1  # >1 enables comm/compute overlap (§4.1)
 

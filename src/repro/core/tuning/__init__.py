@@ -1,10 +1,19 @@
-from repro.core.tuning.decision import DecisionTable, mean_penalty
+from repro.core.tuning.decision import (
+    DecisionTable,
+    TableMeta,
+    mean_penalty,
+)
 from repro.core.tuning.executor import (
     BenchmarkExecutor,
     Dataset,
     DeviceBackend,
     Measurement,
     SimulatorBackend,
+)
+from repro.core.tuning.session import (
+    TunerReport,
+    TuningSession,
+    empirical_penalty,
 )
 from repro.core.tuning.simulator import NetworkProfile, NetworkSimulator, drifted
 from repro.core.tuning.space import (
@@ -17,3 +26,4 @@ from repro.core.tuning.space import (
     grid,
     methods_for,
 )
+from repro.core.tuning.tuners import TUNERS, Tuner, make_tuner

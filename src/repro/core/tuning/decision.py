@@ -3,7 +3,10 @@
 A decision function maps a grid Point (op, p, m) to a Method {algorithm,
 segments}. `DecisionTable` is the dense-map form every tuner can emit;
 `mean_penalty` is the survey's evaluation metric (time of chosen method vs
-experimental optimum).
+experimental optimum). The table serializes to a versioned JSON artifact
+carrying its provenance (tuner, experiment grid, backend profile,
+measurement budget) so a tuning run done once can be shipped to every
+launcher — the survey's answer to combinatorially infeasible brute force.
 """
 from __future__ import annotations
 
@@ -14,12 +17,56 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.tuning.space import Method, Point, methods_for
 
+#: bump when the on-disk layout changes; load() rejects anything else
+SCHEMA_VERSION = 2
+
+
+@dataclasses.dataclass
+class TableMeta:
+    """Provenance of a tuned DecisionTable.
+
+    ops/ps/ms record the experiment grid the tuner actually probed (decisions
+    off-grid are nearest-neighbour extrapolations); profile is the
+    NetworkProfile (or backend description) the measurements came from, so a
+    runtime can detect it is loading a table tuned for a different fabric.
+    """
+
+    tuner: str = "unknown"
+    ops: Tuple[str, ...] = ()
+    ps: Tuple[int, ...] = ()
+    ms: Tuple[int, ...] = ()
+    n_experiments: int = 0
+    penalty: Optional[float] = None
+    backend: str = "simulator"
+    profile: Optional[dict] = None
+
+    def to_json(self) -> dict:
+        return {
+            "tuner": self.tuner, "ops": list(self.ops),
+            "ps": list(self.ps), "ms": list(self.ms),
+            "n_experiments": self.n_experiments, "penalty": self.penalty,
+            "backend": self.backend, "profile": self.profile,
+        }
+
+    @classmethod
+    def from_json(cls, d: dict) -> "TableMeta":
+        return cls(
+            tuner=d.get("tuner", "unknown"),
+            ops=tuple(d.get("ops", ())), ps=tuple(d.get("ps", ())),
+            ms=tuple(d.get("ms", ())),
+            n_experiments=int(d.get("n_experiments", 0)),
+            penalty=d.get("penalty"),
+            backend=d.get("backend", "simulator"),
+            profile=d.get("profile"),
+        )
+
 
 @dataclasses.dataclass
 class DecisionTable:
     """Dense decision map keyed by (op, p, m)."""
 
     table: Dict[Tuple[str, int, int], Method]
+    meta: Optional[TableMeta] = None
 
     def decide(self, op: str, p: int, m: int) -> Method:
         key = (op, p, m)
@@ -49,15 +96,41 @@ class DecisionTable:
              "algorithm": meth.algorithm, "segments": meth.segments}
             for (op, p, m), meth in sorted(self.table.items())
         ]
+        doc = {"schema": SCHEMA_VERSION,
+               "meta": self.meta.to_json() if self.meta else None,
+               "rows": rows}
         with open(path, "w") as f:
-            json.dump(rows, f, indent=1)
+            json.dump(doc, f, indent=1)
 
     @classmethod
     def load(cls, path: str) -> "DecisionTable":
         with open(path) as f:
-            rows = json.load(f)
-        return cls({(r["op"], r["p"], r["m"]):
-                    Method(r["algorithm"], r["segments"]) for r in rows})
+            doc = json.load(f)
+        if isinstance(doc, list):        # legacy pre-versioned artifact
+            rows, meta = doc, None
+        elif isinstance(doc, dict):
+            schema = doc.get("schema")
+            if schema != SCHEMA_VERSION:
+                raise ValueError(
+                    f"unsupported DecisionTable schema in {path!r}: "
+                    f"expected {SCHEMA_VERSION}, got {schema!r}")
+            rows = doc.get("rows")
+            if not isinstance(rows, list):
+                raise ValueError(f"corrupt DecisionTable in {path!r}: "
+                                 "'rows' missing or not a list")
+            meta = TableMeta.from_json(doc["meta"]) if doc.get("meta") \
+                else None
+        else:
+            raise ValueError(f"corrupt DecisionTable in {path!r}: "
+                             f"top level is {type(doc).__name__}")
+        try:
+            table = {(r["op"], int(r["p"]), int(r["m"])):
+                     Method(r["algorithm"], int(r["segments"]))
+                     for r in rows}
+        except (KeyError, TypeError, ValueError) as e:
+            raise ValueError(
+                f"corrupt DecisionTable row in {path!r}: {e}") from e
+        return cls(table, meta=meta)
 
 
 def mean_penalty(

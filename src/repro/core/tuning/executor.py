@@ -94,12 +94,11 @@ class DeviceBackend:
 
     def __init__(self, axis: str = "x"):
         import jax
+        from repro import compat
         self.jax = jax
         self.p = jax.device_count()
         self.axis = axis
-        from jax.sharding import AxisType
-        self.mesh = jax.make_mesh((self.p,), (axis,),
-                                  axis_types=(AxisType.Auto,))
+        self.mesh = compat.make_mesh((self.p,), (axis,))
         self._cache: dict = {}
 
     def _fn(self, op, method: Method, n_elems: int):
@@ -117,7 +116,8 @@ class DeviceBackend:
                 return f(x, axis, p, op="add", segments=method.segments)
             return f(x, axis, p, segments=method.segments)
 
-        jitted = self.jax.jit(self.jax.shard_map(
+        from repro import compat
+        jitted = self.jax.jit(compat.shard_map(
             run, mesh=self.mesh, in_specs=P(None), out_specs=P(None),
             check_vma=False))
         x = jnp.ones((n_elems,), jnp.float32)

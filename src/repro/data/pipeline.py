@@ -19,12 +19,20 @@ from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models.registry import train_batch_shapes
 
 
+_MASK64 = (1 << 64) - 1
+
+
 def _hash_tokens(seed: int, stream: int, offset: int, n: int,
                  vocab: int) -> np.ndarray:
     """SplitMix64-style counter hash -> tokens in [0, vocab)."""
-    idx = (np.arange(offset, offset + n, dtype=np.uint64)
-           + np.uint64(stream) * np.uint64(0x9E3779B97F4A7C15))
-    z = idx + np.uint64(seed) * np.uint64(0xBF58476D1CE4E5B9)
+    # scalar mixing constants are combined in Python-int space masked to 64
+    # bits: np.uint64 scalar products raise RuntimeWarning on wraparound
+    # (array ops wrap silently), and the wrapped value is exactly what
+    # SplitMix64 wants
+    stream_mix = np.uint64((int(stream) * 0x9E3779B97F4A7C15) & _MASK64)
+    seed_mix = np.uint64((int(seed) * 0xBF58476D1CE4E5B9) & _MASK64)
+    idx = np.arange(offset, offset + n, dtype=np.uint64) + stream_mix
+    z = idx + seed_mix
     z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
     z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
     z = z ^ (z >> np.uint64(31))

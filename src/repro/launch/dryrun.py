@@ -20,6 +20,7 @@ import traceback
 
 import jax
 
+from repro import compat
 from repro.configs import ARCHITECTURES, SHAPES, CollectiveConfig, ParallelConfig
 from repro.launch import hlo_analysis as ha
 from repro.launch.mesh import make_production_mesh
@@ -71,7 +72,7 @@ def accounting_metrics(cfg, shape, parallel, coll, mesh, **kw) -> dict:
                                                 mesh, accounting=True, **kw)
         compiled = jax.jit(fn, in_shardings=in_sh,
                            out_shardings=out_sh).lower(*args).compile()
-        cost = compiled.cost_analysis()
+        cost = compat.cost_analysis(compiled)
         coll_b = ha.collective_bytes(compiled.as_text())
         return {
             "flops": float(cost.get("flops", 0)),
@@ -155,7 +156,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     rec["memory"]["peak_bytes_per_device"] = int(peak)
     rec["fits_16gb_hbm"] = bool(peak < 16e9)
 
-    cost = compiled.cost_analysis()
+    cost = compat.cost_analysis(compiled)
     txt = compiled.as_text()
     coll_b = ha.collective_bytes(txt)
     rec["cost_raw"] = {"flops": float(cost.get("flops", 0)),

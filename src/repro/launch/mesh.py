@@ -8,21 +8,20 @@ import; everything else sees the real device count.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod (v5e); 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_local_mesh(model_parallel: int = 1):
     """Smoke/test mesh over whatever devices exist."""
     n = jax.device_count()
     assert n % model_parallel == 0
-    return jax.make_mesh((n // model_parallel, model_parallel),
-                         ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return compat.make_mesh((n // model_parallel, model_parallel),
+                            ("data", "model"))

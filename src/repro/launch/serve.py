@@ -26,11 +26,35 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--window", type=int, default=0)
+    ap.add_argument("--tuning-table", default=None,
+                    help="tuned DecisionTable artifact; prints the tuned "
+                         "collective plan for this model's decode-time "
+                         "message sizes (tensor-parallel serving applies it "
+                         "via CollectiveConfig(decision=...))")
     args = ap.parse_args()
 
     cfg = ARCHITECTURES[args.arch]
     if args.reduced:
         cfg = cfg.reduced()
+
+    if args.tuning_table:
+        from repro.core.collectives.api import TableDecision
+        from repro.core.tuning.decision import DecisionTable
+        table = DecisionTable.load(args.tuning_table)
+        decision = TableDecision(table.as_fn())
+        p = max(jax.device_count(), 2)
+        if table.meta:
+            print(f"tuning table: {args.tuning_table} "
+                  f"(tuner={table.meta.tuner}, "
+                  f"backend={table.meta.backend})")
+        # decode-time collectives: per-token TP all-reduce of the residual
+        # (B, d) and all-gather of vocab-parallel logits (B, V/p)
+        for op, nbytes in (("all_reduce", args.batch * cfg.d_model * 2),
+                           ("all_gather",
+                            args.batch * cfg.vocab_size * 2 // p)):
+            spec = decision.spec_for(op, nbytes, p)
+            print(f"  decode plan p={p} {op:12s} {nbytes:>9d} B -> "
+                  f"{spec.algorithm} segments={spec.segments}")
     api = build_model(cfg, window=args.window,
                       attn_impl="xla" if jax.default_backend() != "tpu"
                       else "auto")

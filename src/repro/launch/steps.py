@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import (
     CollectiveConfig,
     ModelConfig,
@@ -59,7 +60,9 @@ def serve_plan(cfg: ModelConfig, shape: ShapeConfig) -> ServePlan:
 def _decision_source(coll: CollectiveConfig) -> capi.DecisionSource:
     if coll.decision:
         from repro.core.tuning.decision import DecisionTable
-        return capi.TableDecision(DecisionTable.load(coll.decision).as_fn())
+        table = coll.decision if isinstance(coll.decision, DecisionTable) \
+            else DecisionTable.load(coll.decision)
+        return capi.TableDecision(table.as_fn())
     return capi.StaticDecision(
         capi.CollectiveSpec(coll.algorithm, max(1, coll.segment_bytes and 8)))
 
@@ -195,7 +198,7 @@ def build_train_step(
                                    mu=jax.tree.map(lambda _: P(), params),
                                    nu=jax.tree.map(lambda _: P(), params))
             bspec_local = sh.batch_specs(batch, mesh, shape)
-            return jax.shard_map(
+            return compat.shard_map(
                 inner, mesh=mesh,
                 in_specs=(rep, repo, bspec_local),
                 out_specs=(rep, repo, P()),

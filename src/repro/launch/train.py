@@ -40,8 +40,13 @@ def main():
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--collective", default="xla",
                     help="gradient-sync algorithm (xla/ring/rabenseifner/...)")
+    ap.add_argument("--tuning-table", default=None,
+                    help="path to a tuned DecisionTable artifact (produced "
+                         "by TuningSession / examples/autotune_collectives."
+                         "py); routes gradient sync through the tuned "
+                         "{algorithm, segments} per message size")
     ap.add_argument("--decision", default=None,
-                    help="path to a tuned DecisionTable json")
+                    help="deprecated alias for --tuning-table")
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--log-every", type=int, default=1)
@@ -54,8 +59,16 @@ def main():
                         global_batch=args.batch, kind="train")
     mesh = make_local_mesh(model_parallel=args.model_parallel)
     parallel = ParallelConfig()
-    coll = CollectiveConfig(algorithm=args.collective,
-                            decision=args.decision)
+    table_path = args.tuning_table or args.decision
+    table = None
+    if table_path:
+        from repro.core.tuning.decision import DecisionTable
+        table = DecisionTable.load(table_path)   # validate once, reuse below
+        if table.meta:
+            print(f"tuning table: {table_path} (tuner={table.meta.tuner} "
+                  f"n_experiments={table.meta.n_experiments} "
+                  f"penalty={table.meta.penalty})")
+    coll = CollectiveConfig(algorithm=args.collective, decision=table)
 
     fn, _, in_sh, out_sh, donate = build_train_step(
         cfg, shape, parallel, coll, mesh, lr=args.lr,
@@ -69,8 +82,9 @@ def main():
     opt_state = jax.device_put(AdamW(lr=args.lr).init(params), in_sh[1])
     pipe = SyntheticPipeline(cfg, shape, seed=0)
 
+    coll_desc = f"table:{table_path}" if table_path else args.collective
     print(f"arch={cfg.name} devices={jax.device_count()} "
-          f"mesh={dict(mesh.shape)} collective={args.collective}")
+          f"mesh={dict(mesh.shape)} collective={coll_desc}")
     t_start = time.time()
     for i in range(args.steps):
         batch = jax.device_put(

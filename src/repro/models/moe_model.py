@@ -51,7 +51,8 @@ def _moe_apply(h, mp, cfg, *, ep_axis, mesh, compute_dtype,
         aux = jax.tree.map(lambda v: jax.lax.pmean(v, ep_axis), aux)
         return out, aux
 
-    return jax.shard_map(
+    from repro import compat
+    return compat.shard_map(
         inner, mesh=mesh, in_specs=(dspec, espec),
         out_specs=(dspec, jax.tree.map(lambda _: P(), {"lb_loss": 0,
                                                        "z_loss": 0})),

@@ -169,6 +169,20 @@ def current_mesh():
     return _CURRENT_MESH
 
 
+#: trace-time override for JAX versions without ``get_abstract_mesh``
+#: (0.4.x): compat.shard_map registers its manual axes here while tracing
+_MANUAL_OVERRIDE: set = set()
+
+
+def set_manual_override(axes):
+    """Declare mesh axes as under manual shard_map control (legacy JAX).
+    Returns the previous value for restore."""
+    global _MANUAL_OVERRIDE
+    prev = _MANUAL_OVERRIDE
+    _MANUAL_OVERRIDE = set(axes)
+    return prev
+
+
 def _manual_axes():
     """Axis names currently under shard_map manual control (partial-manual
     regions): constraints must not mention them — those dims are already
@@ -176,9 +190,9 @@ def _manual_axes():
     try:
         am = jax.sharding.get_abstract_mesh()
     except Exception:
-        return set(), None
+        return set(_MANUAL_OVERRIDE), None
     if am is None or not am.axis_names:
-        return set(), None
+        return set(_MANUAL_OVERRIDE), None
     manual = {n for n, t in zip(am.axis_names, am.axis_types)
               if "Manual" in str(t)}
     return manual, am
@@ -199,6 +213,10 @@ def _constrain(x, entries):
         return None if e in manual else e
 
     entries = tuple(filt(e) for e in entries)
+    if manual and am is None:
+        # legacy JAX inside (full-)manual shard_map: no abstract mesh to
+        # constrain against; the surviving entries are hints only — drop them
+        return x
     target = am if manual else mesh
     return jax.lax.with_sharding_constraint(
         x, NamedSharding(target, P(*entries)))

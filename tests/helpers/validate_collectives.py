@@ -6,23 +6,24 @@ import os, sys
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 import numpy as np
 import jax, jax.numpy as jnp
-from jax.sharding import PartitionSpec as P, AxisType
+from jax.sharding import PartitionSpec as P
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+from repro import compat
 from repro.core.collectives import algorithms as alg
 
 P_DEV = jax.device_count()
-mesh = jax.make_mesh((P_DEV,), ("x",), axis_types=(AxisType.Auto,))
+mesh = compat.make_mesh((P_DEV,), ("x",))
 
 def run(fn, x, out_specs=None):
-    return jax.jit(jax.shard_map(
+    return jax.jit(compat.shard_map(
         fn, mesh=mesh, in_specs=P(None),
         out_specs=out_specs if out_specs is not None else P(None),
         check_vma=False))(x)
 
 def per_rank(fn, xs, out_specs=P("x")):
     """xs: (p, ...) distinct per-rank inputs."""
-    return jax.jit(jax.shard_map(
+    return jax.jit(compat.shard_map(
         fn, mesh=mesh, in_specs=P("x"), out_specs=out_specs,
         check_vma=False))(xs)
 

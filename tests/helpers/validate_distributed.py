@@ -12,8 +12,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
 import numpy as np
 import jax
 import jax.numpy as jnp
-from jax.sharding import AxisType
 
+from repro import compat
 from repro.configs import get_config
 from repro.configs.base import CollectiveConfig, ParallelConfig, ShapeConfig
 from repro.launch.steps import build_step
@@ -22,8 +22,7 @@ from repro.parallel import sharding as sh
 
 SMOKE = ShapeConfig(name="smoke_train", seq_len=64, global_batch=8,
                     kind="train")
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(AxisType.Auto,) * 2)
+mesh = compat.make_mesh((4, 2), ("data", "model"))
 
 failures = []
 
@@ -90,10 +89,17 @@ check("tuned_sync/microbatch2_matches", diff_mb < 5e-4,
 # ---------------------------------------------------------------------------
 # 2) MoE expert-parallel all_to_all == single-device path
 # ---------------------------------------------------------------------------
-mcfg = get_config("olmoe-1b-7b").reduced().replace(num_experts=8)
+# capacity_factor high enough that neither path drops tokens (see NOTE
+# below): the comparison then checks the collective path, not drop noise
+mcfg = get_config("olmoe-1b-7b").reduced().replace(num_experts=8,
+                                                   capacity_factor=4.0)
 mbatch = make_train_batch(mcfg, SMOKE, seed=5)
 api_single = build_model(mcfg, compute_dtype=jnp.float32, attn_impl="ref")
 params = api_single.init(jax.random.PRNGKey(1))
+# clean context: section 1 left the mesh set, and a mesh-constrained trace
+# auto-partitions the "single-device" reference over 8 devices (router
+# top-k ties flip under reduction reorder -> different drops/loss)
+sh.set_current_mesh(None)
 loss_single, _ = jax.jit(api_single.loss)(params, mbatch)
 
 sh.set_current_mesh(mesh)
@@ -109,7 +115,7 @@ sh.set_current_mesh(None)
 # drops can differ; with capacity_factor high enough both paths keep all
 # tokens and must agree.
 diff = abs(float(loss_single) - float(loss_ep))
-check("moe/ep_matches_single", diff < 5e-2,
+check("moe/ep_matches_single", diff < 5e-3,
       f"{float(loss_single):.4f} vs {float(loss_ep):.4f}")
 
 # tunable all-to-all algorithms agree with xla

@@ -1,0 +1,216 @@
+"""Unified autotuning pipeline: Tuner protocol over the shared
+TuningSession cache, the versioned DecisionTable artifact, warm start,
+drift-aware re-tuning, and the artifact -> launcher wiring."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.core.tuning import (
+    NetworkProfile,
+    NetworkSimulator,
+    SimulatorBackend,
+    TuningSession,
+    drifted,
+    make_tuner,
+)
+from repro.core.tuning.decision import (
+    SCHEMA_VERSION,
+    DecisionTable,
+    TableMeta,
+)
+from repro.core.tuning.space import Method
+
+HERE = os.path.dirname(__file__)
+SRC = os.path.join(HERE, "..", "src")
+
+OPS = ("all_reduce", "broadcast")
+PS = (4, 16)
+MS = tuple(1024 * 16 ** i for i in range(4))
+
+
+def _session(seed=3, trials=3):
+    return TuningSession(
+        SimulatorBackend(NetworkSimulator(NetworkProfile(seed=seed))),
+        trials=trials)
+
+
+# ---------------------------------------------------------------------------
+# DecisionTable artifact
+# ---------------------------------------------------------------------------
+def test_artifact_roundtrip_with_meta(tmp_path):
+    sess = _session()
+    rep = sess.fit_all([make_tuner("exhaustive", OPS, PS, MS)])[0]
+    path = str(tmp_path / "dec.json")
+    rep.table.save(path)
+    loaded = DecisionTable.load(path)
+    assert loaded.table == rep.table.table
+    assert loaded.meta is not None
+    assert loaded.meta.tuner == "exhaustive"
+    assert loaded.meta.ops == OPS and loaded.meta.ps == PS \
+        and loaded.meta.ms == MS
+    assert loaded.meta.n_experiments == rep.n_experiments > 0
+    assert loaded.meta.penalty == pytest.approx(rep.penalty)
+    # the backend profile it was tuned on travels with the artifact
+    assert loaded.meta.backend == "simulator"
+    assert loaded.meta.profile["seed"] == 3
+
+
+def test_artifact_legacy_list_format_loads(tmp_path):
+    path = str(tmp_path / "legacy.json")
+    with open(path, "w") as f:
+        json.dump([{"op": "all_reduce", "p": 4, "m": 1024,
+                    "algorithm": "ring", "segments": 2}], f)
+    t = DecisionTable.load(path)
+    assert t.meta is None
+    assert t.table[("all_reduce", 4, 1024)] == Method("ring", 2)
+
+
+def test_artifact_rejects_bad_schema_and_corruption(tmp_path):
+    path = str(tmp_path / "bad.json")
+    with open(path, "w") as f:
+        json.dump({"schema": SCHEMA_VERSION + 1, "rows": []}, f)
+    with pytest.raises(ValueError, match="schema"):
+        DecisionTable.load(path)
+    with open(path, "w") as f:
+        json.dump({"schema": SCHEMA_VERSION, "rows": "oops"}, f)
+    with pytest.raises(ValueError, match="rows"):
+        DecisionTable.load(path)
+    with open(path, "w") as f:
+        json.dump({"schema": SCHEMA_VERSION,
+                   "rows": [{"op": "all_reduce"}]}, f)
+    with pytest.raises(ValueError, match="corrupt"):
+        DecisionTable.load(path)
+
+
+# ---------------------------------------------------------------------------
+# measurement cache
+# ---------------------------------------------------------------------------
+def test_cache_dedups_probes_across_tuners():
+    sess = _session()
+    reports = sess.fit_all([make_tuner("exhaustive", OPS, PS, MS),
+                            make_tuner("regression", OPS, PS, MS),
+                            make_tuner("quadtree", OPS, PS, MS)])
+    exh, reg, qt = reports
+    assert exh.n_experiments > 0 and exh.cache_hits == 0
+    # the learning/compressor tuners ride the exhaustive sweep for free
+    assert reg.n_experiments == 0 and reg.cache_hits == exh.n_experiments
+    assert qt.n_experiments == 0
+    assert sess.n_experiments == exh.n_experiments
+    # and they all produced full-grid artifacts with comparable quality
+    for rep in reports:
+        assert set(rep.table.table) == {(o, p, m) for o in OPS for p in PS
+                                        for m in MS}
+        assert rep.penalty is not None and rep.penalty < 0.5
+
+
+def test_cache_tops_up_partial_trials():
+    sess = _session(trials=2)
+    meth = Method("ring", 1)
+    a = sess.measure("all_reduce", 4, 1024, meth, trials=2)
+    assert sess.n_experiments == 2
+    b = sess.measure("all_reduce", 4, 1024, meth, trials=3)
+    assert b[:2] == a                       # cached prefix reused
+    assert sess.n_experiments == 3          # only the shortfall measured
+    assert sess.cache_hits == 2
+
+
+def test_fresh_sample_extends_instead_of_replaying():
+    sess = _session()
+    meth = Method("ring", 1)
+    s1 = sess.fresh_sample("all_reduce", 4, 1024, meth)
+    s2 = sess.fresh_sample("all_reduce", 4, 1024, meth)
+    assert s1 != s2                         # noisy backend, new draw
+    assert sess.n_experiments == 2
+    assert sess.cache_hits == 0             # no phantom hit inflation
+    assert sess.n_requested == 2
+    # both samples retained for the learning tuners
+    assert len(sess.dataset()) == 2
+
+
+def test_unevaluable_table_never_wins():
+    """A table whose decisions were never measured gets penalty None (not a
+    perfect 0.0) and loses to any evaluated table."""
+    from repro.core.tuning.decision import DecisionTable
+    from repro.core.tuning.session import TunerReport, empirical_penalty
+    sess = _session()
+    rep = sess.fit_all([make_tuner("exhaustive", OPS, PS, MS)])[0]
+    ghost_table = DecisionTable({("all_to_all", 4, 1024): Method("bruck", 1)})
+    assert empirical_penalty(ghost_table.decide, sess.dataset()) is None
+    ghost = TunerReport(name="ghost", table=ghost_table, n_requested=0,
+                        n_experiments=0, cache_hits=0, fit_seconds=0.0,
+                        penalty=None)
+    assert TuningSession.best([ghost, rep]) is rep
+
+
+# ---------------------------------------------------------------------------
+# warm start + drift
+# ---------------------------------------------------------------------------
+def test_warm_start_refit_costs_zero_experiments(tmp_path):
+    sess = _session()
+    sess.fit_all([make_tuner("exhaustive", OPS, PS, MS)])
+    path = str(tmp_path / "cache.json")
+    sess.save_measurements(path)
+
+    warm = _session()
+    warm.load_measurements(path)
+    rep = warm.fit_all([make_tuner("exhaustive", OPS, PS, MS)])[0]
+    assert rep.n_experiments == 0
+    assert warm.n_experiments == 0
+    assert rep.table.table  # still a full decision table
+
+
+def test_warm_start_rejects_bad_cache_schema(tmp_path):
+    path = str(tmp_path / "cache.json")
+    with open(path, "w") as f:
+        json.dump({"schema": 99, "rows": []}, f)
+    with pytest.raises(ValueError, match="schema"):
+        _session().load_measurements(path)
+
+
+def test_drift_detection_triggers_retune():
+    sess = _session(seed=7)
+    sess.fit_all([make_tuner("exhaustive", OPS, PS, MS)])
+    # same fabric: sentinel probes agree with the cache, no re-tune
+    assert sess.retune_if_drifted(threshold=0.2) is False
+    assert len(sess) > 0
+    # bandwidth collapses 5x: probes deviate, cache is dropped
+    sess.backend = SimulatorBackend(NetworkSimulator(
+        drifted(NetworkProfile(seed=7), byte_time_mult=5.0)))
+    assert sess.retune_if_drifted(threshold=0.2) is True
+    assert len(sess) == 0
+    rep = sess.fit_all([make_tuner("exhaustive", OPS, PS, MS)])[0]
+    assert rep.n_experiments > 0
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: session -> artifact -> launcher
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_end_to_end_session_to_train_launcher(tmp_path):
+    """The acceptance flow: >=2 tuners share cached measurements, the best
+    DecisionTable is persisted, and launch.train --tuning-table routes
+    gradient sync through it."""
+    sess = _session()
+    reports = sess.fit_all([make_tuner("exhaustive", OPS, PS, MS),
+                            make_tuner("regression", OPS, PS, MS)])
+    assert reports[1].n_experiments == 0       # shared cache
+    best = TuningSession.best(reports)
+    path = str(tmp_path / "tuned.json")
+    best.table.save(path)
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "smollm-135m",
+         "--reduced", "--steps", "1", "--seq", "64", "--batch", "8",
+         "--tuning-table", path],
+        env=env, capture_output=True, text=True, timeout=900,
+        cwd=os.path.join(HERE, ".."))
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "tuning table:" in r.stdout
+    assert f"tuner={best.name}" in r.stdout
+    assert "step    0" in r.stdout

@@ -8,6 +8,10 @@ import os
 import subprocess
 import sys
 
+import pytest
+
+pytestmark = pytest.mark.slow      # multi-device subprocess sweeps
+
 HERE = os.path.dirname(__file__)
 SRC = os.path.join(HERE, "..", "src")
 

@@ -5,6 +5,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# per-token jit decode loops across every family: compile-heavy integration
+# tier, excluded from the `make check` fast loop
+pytestmark = pytest.mark.slow
+
 from repro.configs import get_config
 from repro.models import hybrid, ssm, transformer as T
 from repro.models.layers import pad_vocab

@@ -7,6 +7,10 @@ import os
 import subprocess
 import sys
 
+import pytest
+
+pytestmark = pytest.mark.slow      # 512-simulated-device subprocess compiles
+
 HERE = os.path.dirname(__file__)
 SRC = os.path.join(HERE, "..", "src")
 

@@ -3,6 +3,10 @@ import os
 import subprocess
 import sys
 
+import pytest
+
+pytestmark = pytest.mark.slow      # subprocess CLI runs
+
 HERE = os.path.dirname(__file__)
 SRC = os.path.join(HERE, "..", "src")
 

@@ -4,6 +4,9 @@ import math
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.analytical import DEFAULT_HOCKNEY, Hockney, collective_cost

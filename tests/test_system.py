@@ -9,6 +9,7 @@ import sys
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.configs.base import ShapeConfig
@@ -58,6 +59,7 @@ def test_training_reduces_loss_and_resumes(tmp_path):
     assert float(l_orig) == float(l_rest)
 
 
+@pytest.mark.slow
 def test_distributed_integration_8dev():
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC
