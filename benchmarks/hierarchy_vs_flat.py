@@ -1,0 +1,108 @@
+"""Tuned-hierarchical vs tuned-flat vs XLA on multi-pod topologies.
+
+The tentpole claim: one flat {algorithm, segments} table mis-tunes every
+multi-pod mesh, because a flat collective's rounds synchronize on the
+cross-pod links while the hierarchical composition pays them only for the
+1/p_inner shard. Per (pod count, message size) this table reports the
+expected all-reduce time of
+
+  * xla        — the compiler default on the flat machine (the survey's
+                 hardcoded-MPI baseline),
+  * tuned-flat — the best single-table decision, tuned on the flat
+                 machine's bottleneck profile (what PR 1 ships),
+  * tuned-hier — per-level tuned reduce-scatter/all-reduce/all-gather
+                 (what this subsystem ships),
+
+with each row's penalty vs the machine optimum (best of any flat schedule
+or hierarchical composition). Acceptance: mean tuned-hier penalty <= mean
+tuned-flat penalty.
+
+CSV rows: ``hierarchy_vs_flat/<pods>x<inner>/<m>/<strategy>, us, penalty``.
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks.common import row
+from repro.core.topology import (
+    Topology,
+    decided_hierarchical_methods,
+    flat_time,
+    hierarchical_allreduce_time,
+    optimal_machine_allreduce_time,
+    tune_topology,
+)
+from repro.core.tuning import (
+    NetworkSimulator,
+    SimulatorBackend,
+    TuningSession,
+    make_tuner,
+)
+from repro.core.tuning.space import Method
+
+POD_COUNTS = (2, 4, 8)
+INNER = 8
+MESSAGE_SIZES = tuple(4096 * 16 ** i for i in range(4))   # 4 KB .. 16 MB
+TUNERS = ("exhaustive",)
+
+
+def tuned_flat_decision(topology, ms):
+    """The best single-table decision for the flat machine: tuned against
+    the bottleneck profile at the machine's total size."""
+    sess = TuningSession(
+        SimulatorBackend(NetworkSimulator(topology.flat_profile())),
+        trials=3)
+    reports = sess.fit_all([make_tuner(n, ("all_reduce",),
+                                       (topology.total_size,), ms)
+                            for n in TUNERS])
+    return TuningSession.best(reports).table
+
+
+def sweep(pods: int, ms=MESSAGE_SIZES):
+    topo = Topology.two_level(INNER, pods)
+    hier, _ = tune_topology(topo, ms=ms, tuners=TUNERS)
+    flat_table = tuned_flat_decision(topo, ms)
+
+    penalties = {"xla": [], "tuned-flat": [], "tuned-hier": []}
+    for m in ms:
+        opt = optimal_machine_allreduce_time(topo, m)
+        t_xla = flat_time(topo, "all_reduce", Method("xla", 1), m)
+        meth = flat_table.decide("all_reduce", topo.total_size, m)
+        t_flat = flat_time(topo, "all_reduce", meth, m)
+        t_hier = hierarchical_allreduce_time(
+            topo, decided_hierarchical_methods(hier, topo, m), m)
+        for name, t in (("xla", t_xla), ("tuned-flat", t_flat),
+                        ("tuned-hier", t_hier)):
+            pen = (t - opt) / opt
+            penalties[name].append(pen)
+            row(f"hierarchy_vs_flat/{pods}x{INNER}/{m}/{name}",
+                t * 1e6, f"penalty={pen * 100:.1f}%")
+    return penalties
+
+
+def run():
+    means = {"xla": [], "tuned-flat": [], "tuned-hier": []}
+    for pods in POD_COUNTS:
+        pens = sweep(pods)
+        for k, v in pens.items():
+            means[k].extend(v)
+    for k, v in means.items():
+        row(f"hierarchy_vs_flat/mean/{k}", 0.0,
+            f"mean_penalty={sum(v) / len(v) * 100:.1f}%")
+    mh = sum(means["tuned-hier"]) / len(means["tuned-hier"])
+    mf = sum(means["tuned-flat"]) / len(means["tuned-flat"])
+    assert mh <= mf, (
+        f"tuned-hierarchical mean penalty {mh:.3f} worse than tuned-flat "
+        f"{mf:.3f}")
+    return mh, mf
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    mh, mf = run()
+    print(f"# tuned-hier mean penalty {mh * 100:.1f}% <= "
+          f"tuned-flat {mf * 100:.1f}%", file=sys.stderr)

@@ -8,6 +8,7 @@ from benchmarks import (
     analytical_models,
     collective_algorithms,
     decision_tree_pruning,
+    hierarchy_vs_flat,
     kernel_bench,
     method_comparison,
     overlap,
@@ -27,6 +28,7 @@ SUITES = {
     "umtac_pipeline": umtac_pipeline,                 # §5
     "star_adaptation": star_adaptation,               # §3.2.3
     "tuner_budget": tuner_budget,                     # unified pipeline cost
+    "hierarchy_vs_flat": hierarchy_vs_flat,           # topology-aware tuning
     "overlap": overlap,                               # §4.1
     "kernel_bench": kernel_bench,                     # kernels layer
     "roofline_report": roofline_report,               # dry-run artifacts

@@ -72,3 +72,36 @@ if __name__ == "__main__":
     print(f"drift detected={retuned}; re-tune ran {rep.n_experiments} new "
           f"experiments, penalty {rep.penalty * 100:.2f}% on the drifted "
           f"fabric")
+
+    # -- topology-aware: tune per network level, one schema-3 artifact ------
+    from repro.core.topology import (
+        Topology,
+        decided_hierarchical_methods,
+        flat_time,
+        hierarchical_allreduce_time,
+        load_decision,
+        tune_topology,
+    )
+    from repro.core.tuning.space import Method
+
+    print("\n== per-level tuning on a 2-pod topology (4 ranks / pod) ==")
+    topo = Topology.two_level(4, 2)
+    hier, level_reports = tune_topology(topo, ms=MS)
+    for name, reps in level_reports.items():
+        best = TuningSession.best(reps)
+        print(f"  {name:10s} tuner={best.name:12s} "
+              f"experiments={best.n_experiments}")
+    m = 4 << 20
+    t_hier = hierarchical_allreduce_time(
+        topo, decided_hierarchical_methods(hier, topo, m), m)
+    t_xla = flat_time(topo, "all_reduce", Method("xla", 1), m)
+    print(f"  {m >> 20} MB all-reduce: hierarchical "
+          f"{t_hier * 1e6:.0f} us vs flat XLA {t_xla * 1e6:.0f} us "
+          f"({t_xla / t_hier:.1f}x)")
+
+    hier.save("hierarchical_decision.json")
+    reloaded = load_decision("hierarchical_decision.json")
+    print("hierarchical artifact -> hierarchical_decision.json "
+          f"(schema 3, levels={reloaded.names()}; use: python -m "
+          "repro.launch.train --topology 2x4 --tuning-table "
+          "hierarchical_decision.json)")

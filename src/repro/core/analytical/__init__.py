@@ -18,6 +18,12 @@ from repro.core.analytical.costs import (
     optimal_segment_size,
     table3_ring_segmented_time,
 )
+from repro.core.analytical.hierarchy import (
+    allreduce_phases,
+    best_hierarchical,
+    flat_vs_hierarchical,
+    hierarchical_allreduce_cost,
+)
 from repro.core.analytical.fitting import (
     fit_hockney,
     fit_loggp,

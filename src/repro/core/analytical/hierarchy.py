@@ -1,0 +1,116 @@
+"""Hierarchical cost model: per-level costs summed across the composition.
+
+Extends ``collective_cost`` to the topology-aware schedule (reduce-scatter
+up the levels, all-reduce at the top, all-gather back down). Each phase is
+costed under ITS level's communication model — the analytical mirror of
+what the per-level tuner measures — so model-predicted decisions can be
+compared level by level against empirical ones, exactly as the survey
+pits §3.1 models against §3.2 experiments, now with the network-specific
+structure the survey calls out as the missing axis.
+
+``levels`` are innermost first: ``(p, CommModel)`` pairs, optionally with
+per-level gamma.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.analytical.base import CommModel, VPU_GAMMA
+from repro.core.analytical.costs import collective_cost
+
+
+def allreduce_phases(sizes: Sequence[int], m: float
+                     ) -> List[Tuple[int, str, float]]:
+    """The hierarchical all-reduce's phase schedule: ``(level_index, op,
+    nbytes)`` per sequential phase — reduce-scatter up the levels (bytes
+    shrink by each fan-out), all-reduce at the top, all-gather back down
+    (on the per-rank shard, the simulator's and cost model's convention).
+
+    Single source of truth for the byte flow: the simulator-timing,
+    decision-lookup and cost-model walks all iterate this schedule.
+    """
+    assert sizes, "need at least one level"
+    phases: List[Tuple[int, str, float]] = []
+    bytes_here = float(m)
+    shards: List[Tuple[int, float]] = []
+    for i, p in enumerate(sizes[:-1]):
+        phases.append((i, "reduce_scatter", bytes_here))
+        bytes_here /= p
+        shards.append((i, bytes_here))
+    phases.append((len(sizes) - 1, "all_reduce", bytes_here))
+    for i, shard in reversed(shards):
+        phases.append((i, "all_gather", shard))
+    return phases
+
+
+def hierarchical_allreduce_cost(
+    levels: Sequence[Tuple[int, CommModel]],
+    m: float,
+    methods: Optional[Dict[Tuple[int, str], Tuple[str, int]]] = None,
+    *,
+    gamma: float = VPU_GAMMA,
+) -> float:
+    """Predicted wall time of the hierarchical all-reduce.
+
+    ``methods`` maps (level_index, op) -> (algorithm, segments); omitted
+    entries use the per-level model-optimal pick (``best_hierarchical``'s
+    behaviour). Message bytes shrink by each level's fan-out on the way
+    up; the all-gather phase is costed on the per-rank shard, matching the
+    simulator's convention.
+    """
+    return _compose(levels, m, methods, gamma)[0]
+
+
+def best_hierarchical(
+    levels: Sequence[Tuple[int, CommModel]],
+    m: float,
+    *,
+    gamma: float = VPU_GAMMA,
+) -> Tuple[float, Dict[Tuple[int, str], Tuple[str, int]]]:
+    """(predicted time, per-phase picks) with every phase chosen by the
+    model — the analytical counterpart of a per-level tuning run."""
+    t, picks = _compose(levels, m, None, gamma)
+    return t, picks
+
+
+def _phase(op: str, model: CommModel, p: int, m: float,
+           method: Optional[Tuple[str, int]], gamma: float
+           ) -> Tuple[float, Tuple[str, int]]:
+    if method is not None:
+        algo, segs = method
+        return collective_cost(op, algo, model, p, m, segments=segs,
+                               gamma=gamma), method
+    from repro.core.analytical.costs import best_algorithm
+    algo, segs, t = best_algorithm(op, model, p, m, gamma=gamma)
+    return t, (algo, segs)
+
+
+def _compose(levels, m, methods, gamma):
+    methods = methods or {}
+    total = 0.0
+    picks: Dict[Tuple[int, str], Tuple[str, int]] = {}
+    for i, op, nbytes in allreduce_phases([p for p, _ in levels], m):
+        p, model = levels[i]
+        t, pick = _phase(op, model, p, nbytes, methods.get((i, op)), gamma)
+        total += t
+        picks[(i, op)] = pick
+    return total, picks
+
+
+def flat_vs_hierarchical(
+    flat_model: CommModel,
+    levels: Sequence[Tuple[int, CommModel]],
+    m: float,
+    *,
+    flat_algorithm: str = "ring",
+    gamma: float = VPU_GAMMA,
+) -> Tuple[float, float]:
+    """(flat predicted time, hierarchical predicted time) for an m-byte
+    all-reduce — the model's answer to "is the hierarchy worth it here"."""
+    p_total = 1
+    for p, _ in levels:
+        p_total *= p
+    flat = collective_cost("all_reduce", flat_algorithm, flat_model,
+                           p_total, m, gamma=gamma)
+    hier, _ = best_hierarchical(levels, m, gamma=gamma)
+    return flat, hier

@@ -1,4 +1,8 @@
 from repro.core.collectives.algorithms import ALGORITHMS, get
+from repro.core.collectives.hierarchical import (
+    hierarchical_all_reduce,
+    sync_gradients_hierarchical,
+)
 from repro.core.collectives.api import (
     XLA_DECISION,
     CollectiveSpec,

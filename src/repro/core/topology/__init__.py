@@ -1,0 +1,24 @@
+from repro.core.topology.decision import (
+    MULTI_SCHEMA_VERSION,
+    HierarchicalDecision,
+    MultiProfileArtifact,
+    load_decision,
+    profile_distance,
+)
+from repro.core.topology.model import (
+    DEFAULT_LEVEL_PROFILES,
+    LEVEL_NAMES,
+    MeshLevel,
+    Topology,
+    fit_profile,
+    probe_profile,
+    probe_topology,
+)
+from repro.core.topology.tune import (
+    decided_hierarchical_methods,
+    flat_time,
+    hierarchical_allreduce_time,
+    optimal_hierarchical_allreduce_time,
+    optimal_machine_allreduce_time,
+    tune_topology,
+)

@@ -1,0 +1,133 @@
+"""Per-level tuning: one TuningSession per topology level.
+
+Instead of sweeping the flat {op, p, m} grid at the machine's total size —
+where every measurement pays the slowest link — each level tunes over ITS
+OWN profile at ITS OWN fan-out. For the canonical composition
+(reduce-scatter inner, all-reduce outer, all-gather inner) the inner
+levels tune the scatter/gather ops and the outermost level tunes
+all-reduce, so the per-level search space is a thin slice of the flat one
+(Fast Tuning of Intra-Cluster Collective Communications).
+
+The ground-truth timing helpers mirror ``NetworkSimulator`` per level:
+a flat collective over the whole machine runs on the topology's
+``flat_profile`` (its rounds synchronize on the slowest links), while the
+hierarchical composition charges each phase to its level's simulator.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.analytical.hierarchy import allreduce_phases
+from repro.core.topology.decision import HierarchicalDecision
+from repro.core.topology.model import Topology
+from repro.core.tuning.executor import SimulatorBackend
+from repro.core.tuning.session import TunerReport, TuningSession
+from repro.core.tuning.simulator import NetworkSimulator
+from repro.core.tuning.space import MESSAGE_SIZES, Method, methods_for
+from repro.core.tuning.tuners import make_tuner
+
+#: ops each phase of the hierarchical composition needs tuned
+INNER_OPS = ("reduce_scatter", "all_gather", "all_reduce")
+OUTER_OPS = ("all_reduce",)
+
+
+def tune_topology(
+    topology: Topology,
+    *,
+    ms: Sequence[int] = MESSAGE_SIZES,
+    tuners: Sequence[str] = ("exhaustive",),
+    trials: int = 3,
+    backend_factory: Optional[Callable] = None,
+) -> Tuple[HierarchicalDecision, Dict[str, List[TunerReport]]]:
+    """Run a TuningSession per level and keep each level's best table.
+
+    ``backend_factory(level) -> backend`` swaps in real measurement
+    backends (DeviceBackend per fabric tier); the default simulates each
+    level's own NetworkProfile. Returns the HierarchicalDecision plus the
+    per-level TunerReports (the survey's budget/penalty axes, now per
+    level).
+    """
+    levels, reports = [], {}
+    for i, lv in enumerate(topology.levels):
+        ops = OUTER_OPS if i == len(topology.levels) - 1 and i > 0 \
+            else INNER_OPS
+        backend = backend_factory(lv) if backend_factory else \
+            SimulatorBackend(NetworkSimulator(lv.profile))
+        session = TuningSession(backend, trials=trials)
+        reps = session.fit_all([make_tuner(n, ops, (lv.size,), ms)
+                                for n in tuners])
+        best = TuningSession.best(reps)
+        levels.append((lv.name, best.table))
+        reports[lv.name] = reps
+    return HierarchicalDecision(levels), reports
+
+
+# ---------------------------------------------------------------------------
+# ground-truth timing of flat vs hierarchical schedules on a topology
+# ---------------------------------------------------------------------------
+def flat_time(topology: Topology, op: str, method: Method, m: int) -> float:
+    """Expected time of a flat ``op`` over all ranks on the bottleneck
+    profile."""
+    sim = NetworkSimulator(topology.flat_profile())
+    return sim.expected_time(op, method.algorithm, topology.total_size, m,
+                             method.segments)
+
+
+def _phases(topology: Topology, m: int):
+    """(level, op, nbytes) per sequential phase — the byte flow comes from
+    the cost model's shared schedule, so simulator timing, decision lookup
+    and analytical costs can never disagree about it."""
+    sizes = [lv.size for lv in topology.levels]
+    return [(topology.levels[i], op, nbytes)
+            for i, op, nbytes in allreduce_phases(sizes, m)]
+
+
+def hierarchical_allreduce_time(
+    topology: Topology,
+    methods: Dict[Tuple[str, str], Method],
+    m: int,
+) -> float:
+    """Expected time of the hierarchical all-reduce composition under the
+    per-phase ``methods`` map ((level_name, op) -> Method)."""
+    sims = {lv.name: NetworkSimulator(lv.profile) for lv in topology.levels}
+    t = 0.0
+    for lv, op, nbytes in _phases(topology, m):
+        meth = methods[(lv.name, op)]
+        t += sims[lv.name].expected_time(op, meth.algorithm, lv.size,
+                                         nbytes, meth.segments)
+    return t
+
+
+def decided_hierarchical_methods(
+    decision: HierarchicalDecision, topology: Topology, m: int
+) -> Dict[Tuple[str, str], Method]:
+    """The (level, op) -> Method map a HierarchicalDecision picks for an
+    m-byte all-reduce over the topology."""
+    out: Dict[Tuple[str, str], Method] = {}
+    for lv, op, nbytes in _phases(topology, m):
+        spec = decision.spec_for_level(lv.name, op, int(nbytes), lv.size)
+        out[(lv.name, op)] = Method(spec.algorithm, spec.segments)
+    return out
+
+
+def optimal_hierarchical_allreduce_time(topology: Topology, m: int) -> float:
+    """True optimum of the hierarchical composition: per-phase argmin (the
+    phases are sequential, so the composition's optimum is the sum of
+    each phase's optimum)."""
+    sims = {lv.name: NetworkSimulator(lv.profile) for lv in topology.levels}
+    total = 0.0
+    for lv, op, nbytes in _phases(topology, m):
+        _, t = sims[lv.name].optimal(op, lv.size, nbytes,
+                                     methods_for(op, include_xla=False))
+        total += t
+    return total
+
+
+def optimal_machine_allreduce_time(topology: Topology, m: int) -> float:
+    """The oracle both strategies are penalized against: the better of the
+    best flat schedule and the best hierarchical composition."""
+    best_flat = min(flat_time(topology, "all_reduce", meth, m)
+                    for meth in methods_for("all_reduce", include_xla=False))
+    if len(topology.levels) == 1:
+        return best_flat
+    return min(best_flat, optimal_hierarchical_allreduce_time(topology, m))

@@ -61,6 +61,24 @@ class TableMeta:
         )
 
 
+def rows_to_json(table: Dict[Tuple[str, int, int], Method]) -> List[dict]:
+    """The artifact row format, shared by every schema generation (the
+    schema-3 multi-profile container reuses it per named profile)."""
+    return [{"op": op, "p": p, "m": m,
+             "algorithm": meth.algorithm, "segments": meth.segments}
+            for (op, p, m), meth in sorted(table.items())]
+
+
+def rows_from_json(rows: List[dict], path: str
+                   ) -> Dict[Tuple[str, int, int], Method]:
+    try:
+        return {(r["op"], int(r["p"]), int(r["m"])):
+                Method(r["algorithm"], int(r["segments"])) for r in rows}
+    except (KeyError, TypeError, ValueError) as e:
+        raise ValueError(
+            f"corrupt DecisionTable row in {path!r}: {e}") from e
+
+
 @dataclasses.dataclass
 class DecisionTable:
     """Dense decision map keyed by (op, p, m)."""
@@ -91,14 +109,9 @@ class DecisionTable:
 
     # -- serialization ------------------------------------------------------
     def save(self, path: str):
-        rows = [
-            {"op": op, "p": p, "m": m,
-             "algorithm": meth.algorithm, "segments": meth.segments}
-            for (op, p, m), meth in sorted(self.table.items())
-        ]
         doc = {"schema": SCHEMA_VERSION,
                "meta": self.meta.to_json() if self.meta else None,
-               "rows": rows}
+               "rows": rows_to_json(self.table)}
         with open(path, "w") as f:
             json.dump(doc, f, indent=1)
 
@@ -123,14 +136,7 @@ class DecisionTable:
         else:
             raise ValueError(f"corrupt DecisionTable in {path!r}: "
                              f"top level is {type(doc).__name__}")
-        try:
-            table = {(r["op"], int(r["p"]), int(r["m"])):
-                     Method(r["algorithm"], int(r["segments"]))
-                     for r in rows}
-        except (KeyError, TypeError, ValueError) as e:
-            raise ValueError(
-                f"corrupt DecisionTable row in {path!r}: {e}") from e
-        return cls(table, meta=meta)
+        return cls(rows_from_json(rows, path), meta=meta)
 
 
 def mean_penalty(

@@ -118,7 +118,9 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             rec.update(status="skip", reason=plan.reason)
             return rec
 
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh, topology = make_production_mesh(multi_pod=multi_pod)
+    rec["topology"] = " > ".join(f"{lv.name}({lv.size})"
+                                 for lv in reversed(topology.levels))
     chips = mesh.size
     parallel = parallel_for(arch, shape.kind)
     import dataclasses as _dc

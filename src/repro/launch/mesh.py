@@ -4,24 +4,54 @@ Functions, not module-level constants — importing this module never touches
 jax device state. The dry-run entrypoint sets
 ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
 import; everything else sees the real device count.
+
+Mesh builders return the mesh TOGETHER with its ``Topology`` (the
+per-level network description ``repro.core.topology`` tunes against), so
+every launcher knows which mesh axis rides which fabric tier.
 """
 from __future__ import annotations
+
+from typing import Tuple
 
 import jax
 
 from repro import compat
+from repro.core.topology import DEFAULT_LEVEL_PROFILES, MeshLevel, Topology
 
 
-def make_production_mesh(*, multi_pod: bool = False):
-    """16x16 = 256 chips per pod (v5e); 2 pods = 512 chips multi-pod."""
+def make_production_mesh(*, multi_pod: bool = False) -> Tuple:
+    """16x16 = 256 chips per pod (v5e); 2 pods = 512 chips multi-pod.
+
+    Returns ``(mesh, topology)``: single-pod is one ICI level over "data";
+    multi-pod stacks the cross-pod DCN level over "pod" on top of it.
+    """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return compat.make_mesh(shape, axes)
+    mesh = compat.make_mesh(shape, axes)
+    return mesh, local_topology(mesh)
 
 
-def make_local_mesh(model_parallel: int = 1):
-    """Smoke/test mesh over whatever devices exist."""
+def make_local_mesh(model_parallel: int = 1, pods: int = 1):
+    """Smoke/test mesh over whatever devices exist. ``pods > 1`` splits the
+    data axis into ("pod", "data") to exercise the hierarchical gradient
+    sync on simulated devices."""
     n = jax.device_count()
-    assert n % model_parallel == 0
+    assert n % (model_parallel * pods) == 0, \
+        f"{n} devices not divisible by {pods} pods x {model_parallel} mp"
+    if pods > 1:
+        return compat.make_mesh(
+            (pods, n // (pods * model_parallel), model_parallel),
+            ("pod", "data", "model"))
     return compat.make_mesh((n // model_parallel, model_parallel),
                             ("data", "model"))
+
+
+def local_topology(mesh) -> Topology:
+    """A Topology matching a local mesh's data axes (default profiles)."""
+    levels = [MeshLevel("intra_pod", mesh.shape["data"],
+                        DEFAULT_LEVEL_PROFILES["intra_pod"], axis="data")]
+    if "pod" in mesh.axis_names:
+        levels.append(MeshLevel("cross_pod", mesh.shape["pod"],
+                                DEFAULT_LEVEL_PROFILES["cross_pod"],
+                                axis="pod"))
+    return Topology(tuple(levels))

@@ -1,8 +1,17 @@
 """Serving launcher: batched greedy decode against a KV cache.
 
-Example:
+With ``--tensor-parallel N --tuning-table ART`` the decode loop runs the
+tuned tensor-parallel path: every token's logits assembly goes through the
+artifact's {algorithm, segments} choice for the all-gather (vocab-parallel
+shards) or all-reduce (partial sums) — bit-identical to the untuned loop,
+but executing the tuned wire schedule.
+
+Examples:
     python -m repro.launch.serve --arch smollm-135m --reduced \\
         --prompt-len 32 --gen 32 --batch 4
+    XLA_FLAGS=--xla_force_host_platform_device_count=2 \\
+        python -m repro.launch.serve --arch smollm-135m --reduced \\
+        --tensor-parallel 2 --tuning-table tuned_decision.json
 """
 from __future__ import annotations
 
@@ -27,32 +36,44 @@ def main():
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--window", type=int, default=0)
     ap.add_argument("--tuning-table", default=None,
-                    help="tuned DecisionTable artifact; prints the tuned "
-                         "collective plan for this model's decode-time "
-                         "message sizes (tensor-parallel serving applies it "
-                         "via CollectiveConfig(decision=...))")
+                    help="tuned decision artifact (schema 2 or 3); prints "
+                         "the tuned collective plan and, with "
+                         "--tensor-parallel, drives the decode loop's "
+                         "logits collective through it")
+    ap.add_argument("--tensor-parallel", type=int, default=0,
+                    help=">=2: run the tuned TP decode path over a 'model' "
+                         "mesh axis of this size (requires --tuning-table "
+                         "and that many devices)")
+    ap.add_argument("--tp-collective", default="all_gather",
+                    choices=("all_gather", "all_reduce"),
+                    help="which tuned collective assembles the TP logits")
     args = ap.parse_args()
 
     cfg = ARCHITECTURES[args.arch]
     if args.reduced:
         cfg = cfg.reduced()
 
+    decision = None
     if args.tuning_table:
         from repro.core.collectives.api import TableDecision
-        from repro.core.tuning.decision import DecisionTable
-        table = DecisionTable.load(args.tuning_table)
-        decision = TableDecision(table.as_fn())
-        p = max(jax.device_count(), 2)
-        if table.meta:
+        from repro.core.topology import HierarchicalDecision, load_decision
+        from repro.launch.tp_decode import tp_decode_plan
+        loaded = load_decision(args.tuning_table)
+        if isinstance(loaded, HierarchicalDecision):
+            decision = loaded
             print(f"tuning table: {args.tuning_table} "
-                  f"(tuner={table.meta.tuner}, "
-                  f"backend={table.meta.backend})")
+                  f"(hierarchical, levels={loaded.names()})")
+        else:
+            decision = TableDecision(loaded.as_fn())
+            if loaded.meta:
+                print(f"tuning table: {args.tuning_table} "
+                      f"(tuner={loaded.meta.tuner}, "
+                      f"backend={loaded.meta.backend})")
         # decode-time collectives: per-token TP all-reduce of the residual
         # (B, d) and all-gather of vocab-parallel logits (B, V/p)
-        for op, nbytes in (("all_reduce", args.batch * cfg.d_model * 2),
-                           ("all_gather",
-                            args.batch * cfg.vocab_size * 2 // p)):
-            spec = decision.spec_for(op, nbytes, p)
+        p = args.tensor_parallel or max(jax.device_count(), 2)
+        for op, nbytes, spec in tp_decode_plan(
+                decision, args.batch, cfg.d_model, cfg.vocab_size, p):
             print(f"  decode plan p={p} {op:12s} {nbytes:>9d} B -> "
                   f"{spec.algorithm} segments={spec.segments}")
     api = build_model(cfg, window=args.window,
@@ -66,7 +87,28 @@ def main():
     prompt = jnp.asarray(rng.integers(0, cfg.vocab_size,
                                       (B, args.prompt_len)), jnp.int32)
 
-    step = jax.jit(api.decode_step)
+    if args.tensor_parallel >= 2:
+        if decision is None:
+            raise SystemExit("--tensor-parallel needs --tuning-table")
+        from repro import compat
+        from repro.launch.tp_decode import build_tp_decode_step
+        tp = args.tensor_parallel
+        if jax.device_count() < tp:
+            raise SystemExit(f"{tp}-way tensor parallelism needs {tp} "
+                             f"devices, have {jax.device_count()} (set "
+                             "XLA_FLAGS=--xla_force_host_platform_device_"
+                             f"count={tp})")
+        tp_mesh = compat.make_mesh((tp,), ("model",))
+        step = build_tp_decode_step(api, tp_mesh, decision,
+                                    collective=args.tp_collective)
+        from repro.launch.tp_decode import executed_spec
+        nbytes, spec = executed_spec(decision, args.tp_collective,
+                                     args.batch, cfg.vocab_size, tp)
+        print(f"tensor-parallel decode: p={tp} via tuned "
+              f"{args.tp_collective} ({nbytes} B -> {spec.algorithm} "
+              f"segments={spec.segments})")
+    else:
+        step = jax.jit(api.decode_step)
     cache = api.init_cache(B, cache_len)
 
     # prefill by stepping the prompt (uniform across families)

@@ -59,9 +59,16 @@ def serve_plan(cfg: ModelConfig, shape: ShapeConfig) -> ServePlan:
 # ---------------------------------------------------------------------------
 def _decision_source(coll: CollectiveConfig) -> capi.DecisionSource:
     if coll.decision:
+        from repro.core.topology import HierarchicalDecision, load_decision
         from repro.core.tuning.decision import DecisionTable
-        table = coll.decision if isinstance(coll.decision, DecisionTable) \
-            else DecisionTable.load(coll.decision)
+        dec = coll.decision
+        if isinstance(dec, str):
+            dec = load_decision(dec)     # schema 2/3, flat or hierarchical
+        if isinstance(dec, HierarchicalDecision):
+            return dec
+        table = dec if isinstance(dec, DecisionTable) else None
+        if table is None:
+            raise TypeError(f"unsupported decision source: {type(dec)}")
         return capi.TableDecision(table.as_fn())
     return capi.StaticDecision(
         capi.CollectiveSpec(coll.algorithm, max(1, coll.segment_bytes and 8)))
@@ -173,18 +180,40 @@ def build_train_step(
         # partial-manual shard_map over the data axes: per-shard backward,
         # tuned per-leaf gradient all-reduce (the paper's technique), local
         # optimizer step on replicated params
+        from repro.core.collectives.hierarchical import (
+            sync_gradients_hierarchical,
+        )
+        from repro.core.topology import HierarchicalDecision
+        hierarchical = isinstance(decision, HierarchicalDecision) \
+            and "pod" in dpx
+        if hierarchical:
+            # address the artifact's levels by canonical name when it has
+            # them: a 3-level artifact's level 0 is intra_host (the
+            # model-parallel tier), not the data axis's intra_pod
+            names = decision.names()
+            inner_level = "intra_pod" if "intra_pod" in names else 0
+            outer_level = "cross_pod" if "cross_pod" in names else -1
+
         def fn(params, opt_state, batch):
             def inner(params, opt_state, batch):
                 (loss, aux), grads = grad_fn(params, batch)
-                # tuned algorithms run within the pod ("data" ring); the
-                # cross-pod hop is a hierarchical psum on top (topology-aware
-                # two-level schedule, survey §1 "network specific")
-                grads = capi.sync_gradients(grads, "data",
-                                            mesh.shape["data"], decision,
-                                            mean=False)
-                if "pod" in dpx:
-                    grads = jax.tree.map(
-                        lambda g: jax.lax.psum(g, "pod"), grads)
+                if hierarchical:
+                    # full topology-aware schedule: reduce-scatter inside
+                    # the pod, all-reduce across pods on the 1/p shard,
+                    # all-gather inside — each phase tuned per level
+                    grads = sync_gradients_hierarchical(
+                        grads, "data", mesh.shape["data"],
+                        "pod", mesh.shape["pod"], decision, mean=False,
+                        inner_level=inner_level, outer_level=outer_level)
+                else:
+                    # tuned algorithms run within the pod ("data" ring);
+                    # the cross-pod hop is a plain psum on top
+                    grads = capi.sync_gradients(grads, "data",
+                                                mesh.shape["data"],
+                                                decision, mean=False)
+                    if "pod" in dpx:
+                        grads = jax.tree.map(
+                            lambda g: jax.lax.psum(g, "pod"), grads)
                 grads = jax.tree.map(lambda g: g / dsz, grads)
                 loss = jax.lax.pmean(loss, dpx)
                 aux = jax.tree.map(lambda v: jax.lax.pmean(v, dpx), aux)

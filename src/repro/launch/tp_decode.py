@@ -1,0 +1,104 @@
+"""Tensor-parallel decode through tuned collectives.
+
+The decode hot loop's collectives are the per-token all-gather of
+vocab-parallel logits and the all-reduce of partial logits — this module
+routes BOTH through a ``DecisionSource`` (a tuned ``TableDecision`` or a
+``HierarchicalDecision``), so the serving launcher consumes the artifact
+instead of only printing the plan.
+
+Numerics are exact by construction, so tuned decode is bit-identical to
+the untuned path (asserted in tests/test_decode_consistency.py):
+
+  * all_gather mode: each rank keeps its contiguous V/p logits columns
+    (identical floating-point values to the same columns of the full
+    logits) and the tuned all-gather reassembles them in rank order;
+  * all_reduce mode: each rank zeroes every column it does not own and
+    the tuned sum combines disjoint supports — adding exact zeros never
+    perturbs the surviving addend.
+
+On JAX 0.4.x the model compute inside shard_map is replicated (the compat
+layer's documented fallback); the collectives still execute the tuned wire
+schedule, which is what the decision artifact tunes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.core.collectives.api import DecisionSource, apply_collective
+
+TP_COLLECTIVES = ("all_gather", "all_reduce")
+
+
+def build_tp_decode_step(api, mesh, decision: DecisionSource, *,
+                         collective: str = "all_gather", axis: str = "model"):
+    """A jit-able ``step(params, cache, tokens) -> (logits, cache)`` whose
+    per-token logits assembly runs the tuned collective over ``axis``."""
+    assert collective in TP_COLLECTIVES, collective
+    p = mesh.shape[axis]
+
+    def inner(params, cache, tok):
+        logits, new_cache = api.decode_step(params, cache, tok)
+        V = logits.shape[-1]
+        assert V % p == 0, f"vocab {V} not divisible by tp={p}"
+        shard = V // p
+        r = jax.lax.axis_index(axis)
+        # the wire message: the V/p shard for all_gather, the full masked
+        # logits buffer for all_reduce
+        nbytes = logits.size * logits.dtype.itemsize
+        if collective == "all_gather":
+            nbytes //= p
+        spec = decision.spec_for(collective, nbytes, p)
+        if collective == "all_gather":
+            # vocab-parallel: own columns, transposed so the gather's
+            # leading-axis concatenation lands in rank order
+            own = jax.lax.dynamic_slice_in_dim(logits, r * shard, shard,
+                                               axis=-1)
+            gathered = apply_collective("all_gather", own.T, axis, p, spec)
+            logits = gathered.T
+        else:
+            # partial-sum form: zero the columns other ranks own; the
+            # tuned all-reduce of disjoint supports is an exact reassembly
+            cols = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                            logits.ndim - 1)
+            masked = jnp.where(cols // shard == r, logits,
+                               jnp.zeros_like(logits))
+            logits = apply_collective("all_reduce", masked, axis, p, spec)
+        return logits, new_cache
+
+    shard_mapped = compat.shard_map(
+        inner, mesh=mesh,
+        in_specs=(P(), P(), P()),
+        out_specs=(P(), P()),
+        check_vma=False)
+    return jax.jit(shard_mapped)
+
+
+def tp_decode_plan(decision: DecisionSource, batch: int, d_model: int,
+                   vocab: int, p: int, itemsize: int = 2):
+    """The (op, nbytes) -> spec plan for a TP model's decode-time messages
+    (per-layer residual all-reduce, vocab-parallel logits all-gather) —
+    what the serving launcher reports before entering the loop."""
+    from repro.models.layers import pad_vocab
+    rows = []
+    for op, nbytes in (("all_reduce", batch * d_model * itemsize),
+                       ("all_gather",
+                        batch * pad_vocab(vocab) * itemsize // p)):
+        spec = decision.spec_for(op, nbytes, p)
+        rows.append((op, nbytes, spec))
+    return rows
+
+
+def executed_spec(decision: DecisionSource, collective: str, batch: int,
+                  vocab: int, p: int, itemsize: int = 2):
+    """(nbytes, spec) of the logits collective ``build_tp_decode_step``
+    will actually run — same lookup as the step function (including the
+    Megatron-style vocab padding the logits head applies), so the launcher
+    reports exactly what executes."""
+    from repro.models.layers import pad_vocab
+    nbytes = batch * pad_vocab(vocab) * itemsize
+    if collective == "all_gather":
+        nbytes //= p
+    return nbytes, decision.spec_for(collective, nbytes, p)

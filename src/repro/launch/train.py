@@ -13,6 +13,7 @@ Examples:
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -47,6 +48,13 @@ def main():
                          "{algorithm, segments} per message size")
     ap.add_argument("--decision", default=None,
                     help="deprecated alias for --tuning-table")
+    ap.add_argument("--topology", default=None,
+                    help="network hierarchy: a 'PODSxDATA' spec (e.g. 2x4) "
+                         "or a Topology JSON path. Splits the data axis "
+                         "into ('pod', 'data'); with a schema-3 "
+                         "hierarchical --tuning-table, gradient sync runs "
+                         "the per-level reduce-scatter / all-reduce / "
+                         "all-gather composition")
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--log-every", type=int, default=1)
@@ -57,14 +65,53 @@ def main():
         cfg = cfg.reduced()
     shape = ShapeConfig(name="cli", seq_len=args.seq,
                         global_batch=args.batch, kind="train")
-    mesh = make_local_mesh(model_parallel=args.model_parallel)
+    topology = None
+    if args.topology:
+        from repro.core.topology import Topology
+        if os.path.exists(args.topology):
+            topology = Topology.load(args.topology)
+        else:
+            topology = Topology.from_spec(args.topology)
+        # probe-derived topologies carry no mesh axes: map the outermost
+        # level onto "pod" and the innermost onto "data" so a multi-level
+        # topology can never silently degrade to flat sync
+        pod_lv = next((lv for lv in topology.levels if lv.axis == "pod"),
+                      topology.outer if len(topology.levels) > 1 else None)
+        pods = pod_lv.size if pod_lv else 1
+        mesh = make_local_mesh(model_parallel=args.model_parallel,
+                               pods=pods)
+        data_lv = next((lv for lv in topology.levels if lv.axis == "data"),
+                       topology.inner if len(topology.levels) > 1 else None)
+        data_spec = data_lv.size if data_lv else None
+        if data_spec is not None and mesh.shape["data"] != data_spec:
+            raise SystemExit(
+                f"--topology names {data_spec} data ranks per pod but the "
+                f"device count yields {mesh.shape['data']} "
+                f"({jax.device_count()} devices / {pods} pods / "
+                f"{args.model_parallel} model-parallel); a table tuned at "
+                f"fan-out {data_spec} would silently mis-decide")
+        model_lv = next((lv for lv in topology.levels
+                         if lv.axis == "model"), None)
+        if model_lv is not None and model_lv.size != args.model_parallel:
+            raise SystemExit(
+                f"--topology names {model_lv.size} model-parallel ranks "
+                f"({model_lv.name}) but --model-parallel is "
+                f"{args.model_parallel}")
+        desc = " > ".join(f"{lv.name}({lv.size})"
+                          for lv in reversed(topology.levels))
+        print(f"topology: {desc}")
+    else:
+        mesh = make_local_mesh(model_parallel=args.model_parallel)
     parallel = ParallelConfig()
     table_path = args.tuning_table or args.decision
     table = None
     if table_path:
-        from repro.core.tuning.decision import DecisionTable
-        table = DecisionTable.load(table_path)   # validate once, reuse below
-        if table.meta:
+        from repro.core.topology import HierarchicalDecision, load_decision
+        table = load_decision(table_path)   # validate once, reuse below
+        if isinstance(table, HierarchicalDecision):
+            print(f"tuning table: {table_path} "
+                  f"(hierarchical, levels={table.names()})")
+        elif table.meta:
             print(f"tuning table: {table_path} (tuner={table.meta.tuner} "
                   f"n_experiments={table.meta.n_experiments} "
                   f"penalty={table.meta.penalty})")

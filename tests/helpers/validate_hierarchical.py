@@ -1,0 +1,96 @@
+"""Validate the hierarchical collective composition and the tuned
+tensor-parallel decode path on simulated CPU devices. Run as a subprocess
+(sets device count before importing jax). Prints OK/FAIL lines and a final
+``FAILS: n``; exit 1 on any FAIL.
+"""
+import os, sys
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+import numpy as np
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+from repro import compat
+from repro.core.collectives.api import CollectiveSpec, StaticDecision
+from repro.core.collectives.hierarchical import (
+    hierarchical_all_reduce,
+    sync_gradients_hierarchical,
+)
+from repro.core.topology.decision import HierarchicalDecision
+from repro.core.tuning.decision import DecisionTable
+from repro.core.tuning.space import Method
+
+N_DEV = jax.device_count()
+OUTER = 2
+INNER = N_DEV // OUTER
+mesh = compat.make_mesh((OUTER, INNER), ("pod", "data"))
+
+fails = []
+def check(name, got, want, tol=2e-5):
+    err = float(jnp.max(jnp.abs(got.astype(jnp.float32)
+                                - want.astype(jnp.float32))))
+    ok = err <= tol
+    print(("OK  " if ok else "FAIL"), name, "err=%.3g" % err)
+    if not ok:
+        fails.append(name)
+
+
+def per_rank(fn, xs):
+    """xs: (pod, data, ...) distinct per-rank inputs, result gathered."""
+    return jax.jit(compat.shard_map(
+        fn, mesh=mesh, in_specs=P("pod", "data"),
+        out_specs=P("pod", "data"), check_vma=False))(xs)
+
+
+rng = np.random.default_rng(0)
+
+# a HierarchicalDecision whose levels pick different non-trivial algorithms
+hier = HierarchicalDecision([
+    ("intra_pod", DecisionTable({
+        ("reduce_scatter", INNER, 1024): Method("ring", 1),
+        ("all_gather", INNER, 1024): Method("bruck", 1),
+    })),
+    ("cross_pod", DecisionTable({
+        ("all_reduce", OUTER, 1024): Method("recursive_doubling", 1),
+    })),
+])
+
+decisions = [
+    ("xla", None),
+    ("static_ring", StaticDecision(CollectiveSpec("ring", 1))),
+    ("hier_table", hier),
+]
+
+for dtype in (jnp.float32, jnp.bfloat16):
+    tol = 2e-5 if dtype == jnp.float32 else 0.11
+    for n in (64, 1000, 4096):
+        xs = jnp.asarray(rng.normal(size=(OUTER, INNER, n)), dtype)
+        want = jnp.broadcast_to(
+            xs.astype(jnp.float32).sum((0, 1), keepdims=True),
+            (OUTER, INNER, n))
+        for dname, dec in decisions:
+            f = (lambda xr, _d=dec: hierarchical_all_reduce(
+                xr[0, 0], "data", INNER, "pod", OUTER, _d)[None, None])
+            got = per_rank(f, xs)
+            check(f"hier_all_reduce/{dname}/{n}/{dtype.__name__}",
+                  got, want, tol)
+
+# gradient-tree variant: mean over all ranks, ragged leaf shapes
+tree = {"w": jnp.asarray(rng.normal(size=(OUTER, INNER, 33, 7)),
+                         jnp.float32),
+        "b": jnp.asarray(rng.normal(size=(OUTER, INNER, 5)), jnp.float32)}
+want_tree = jax.tree.map(lambda a: a.astype(jnp.float32).mean((0, 1)), tree)
+
+def sync(t):
+    local = jax.tree.map(lambda a: a[0, 0], t)
+    out = sync_gradients_hierarchical(local, "data", INNER, "pod", OUTER,
+                                      hier, mean=True)
+    return jax.tree.map(lambda a: a[None, None], out)
+
+got_tree = per_rank(sync, tree)
+for k in tree:
+    check(f"sync_gradients_hierarchical/{k}", got_tree[k][0, 0],
+          want_tree[k])
+
+print(f"FAILS: {len(fails)}")
+sys.exit(1 if fails else 0)

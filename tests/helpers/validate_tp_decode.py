@@ -1,0 +1,61 @@
+"""Validate the tuned tensor-parallel decode path: logits must be
+BIT-IDENTICAL to the plain (untuned, single-program) decode loop, for both
+TP collectives and several tuned algorithms. Run as a subprocess (sets the
+device count before importing jax). Prints OK/FAIL lines and ``FAILS: n``;
+exit 1 on any FAIL.
+"""
+import os, sys
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=2")
+import numpy as np
+import jax, jax.numpy as jnp
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+from repro import compat
+from repro.configs import get_config
+from repro.core.collectives.api import CollectiveSpec, StaticDecision
+from repro.launch.tp_decode import build_tp_decode_step
+from repro.models.registry import build_model
+
+P_TP = jax.device_count()
+cfg = get_config("smollm-135m").reduced()
+api = build_model(cfg, attn_impl="xla")
+params = api.init(jax.random.PRNGKey(0))
+mesh = compat.make_mesh((P_TP,), ("model",))
+
+B, prompt_len, gen = 2, 6, 6
+rng = np.random.default_rng(0)
+prompt = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, prompt_len)),
+                     jnp.int32)
+
+def decode(step, label):
+    cache = api.init_cache(B, prompt_len + gen)
+    outs = []
+    for i in range(prompt_len):
+        logits, cache = step(params, cache, prompt[:, i:i + 1])
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    for _ in range(gen):
+        logits, cache = step(params, cache, tok)
+        outs.append(np.asarray(logits))
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    return np.stack(outs)
+
+ref = decode(jax.jit(api.decode_step), "plain")
+
+fails = []
+CASES = [("all_gather", "xla"), ("all_gather", "ring"),
+         ("all_gather", "bruck"),
+         ("all_reduce", "xla"), ("all_reduce", "ring"),
+         ("all_reduce", "recursive_doubling"),
+         ("all_reduce", "rabenseifner")]
+for collective, algo in CASES:
+    dec = StaticDecision(CollectiveSpec(algo, 1))
+    step = build_tp_decode_step(api, mesh, dec, collective=collective)
+    got = decode(step, f"{collective}/{algo}")
+    identical = (got == ref).all()
+    print(("OK  " if identical else "FAIL"),
+          f"tp_decode/{collective}/{algo} bit-identical={bool(identical)}")
+    if not identical:
+        fails.append((collective, algo))
+
+print(f"FAILS: {len(fails)}")
+sys.exit(1 if fails else 0)

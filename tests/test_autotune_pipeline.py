@@ -86,6 +86,38 @@ def test_artifact_rejects_bad_schema_and_corruption(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# off-grid decisions (nearest-neighbour extrapolation, §3.2.1)
+# ---------------------------------------------------------------------------
+def test_decide_offgrid_nearest_neighbour():
+    """Queries beyond the probed (p, m) grid extrapolate to the nearest
+    probed cell instead of failing or silently falling back to XLA."""
+    table = DecisionTable({
+        ("all_reduce", 4, 1024): Method("recursive_doubling", 1),
+        ("all_reduce", 4, 1 << 20): Method("ring", 4),
+        ("all_reduce", 16, 1024): Method("recursive_doubling", 1),
+        ("all_reduce", 16, 1 << 20): Method("rabenseifner", 1),
+    })
+    # exact hit
+    assert table.decide("all_reduce", 4, 1024) == \
+        Method("recursive_doubling", 1)
+    # m between grid points -> nearest lower m at that p
+    assert table.decide("all_reduce", 4, 4096) == \
+        Method("recursive_doubling", 1)
+    # m beyond the probed maximum -> the largest probed m
+    assert table.decide("all_reduce", 16, 1 << 28) == \
+        Method("rabenseifner", 1)
+    # m below the probed minimum -> the smallest probed m
+    assert table.decide("all_reduce", 16, 64) == \
+        Method("recursive_doubling", 1)
+    # p off-grid -> nearest probed p (32 -> 16, 2 -> 4)
+    assert table.decide("all_reduce", 32, 1 << 20) == \
+        Method("rabenseifner", 1)
+    assert table.decide("all_reduce", 2, 1 << 20) == Method("ring", 4)
+    # an op the table never probed degrades to the XLA default
+    assert table.decide("broadcast", 4, 1024) == Method("xla", 1)
+
+
+# ---------------------------------------------------------------------------
 # measurement cache
 # ---------------------------------------------------------------------------
 def test_cache_dedups_probes_across_tuners():
@@ -168,6 +200,36 @@ def test_warm_start_rejects_bad_cache_schema(tmp_path):
         json.dump({"schema": 99, "rows": []}, f)
     with pytest.raises(ValueError, match="schema"):
         _session().load_measurements(path)
+
+
+def test_retune_if_drifted_no_drift_keeps_table():
+    """The no-drift branch: sentinel probes agree, the cache survives, and
+    re-fitting reproduces the same decisions at zero new sweep cost."""
+    sess = _session(seed=5)
+    rep0 = sess.fit_all([make_tuner("exhaustive", OPS, PS, MS)])[0]
+    exps_before = sess.n_experiments
+    assert sess.retune_if_drifted(threshold=0.2) is False
+    assert len(sess) > 0                       # cache kept
+    # only the sentinel probes themselves were re-measured
+    sentinel_cost = sess.n_experiments - exps_before
+    assert 0 < sentinel_cost <= 8 * sess.trials
+    rep1 = sess.fit_all([make_tuner("exhaustive", OPS, PS, MS)])[0]
+    assert rep1.n_experiments == 0             # sweep rides the kept cache
+    assert rep1.table.table == rep0.table.table
+
+
+def test_retune_if_drifted_drift_refits():
+    """The drift branch: the cache is dropped and the next fit re-measures
+    the changed fabric, adapting the decisions to it."""
+    sess = _session(seed=5)
+    sess.fit_all([make_tuner("exhaustive", OPS, PS, MS)])
+    sess.backend = SimulatorBackend(NetworkSimulator(
+        drifted(NetworkProfile(seed=5), byte_time_mult=5.0)))
+    assert sess.retune_if_drifted(threshold=0.2) is True
+    assert len(sess) == 0                      # stale measurements gone
+    rep = sess.fit_all([make_tuner("exhaustive", OPS, PS, MS)])[0]
+    assert rep.n_experiments > 0               # paid for fresh probes
+    assert rep.penalty is not None and rep.penalty < 0.5
 
 
 def test_drift_detection_triggers_retune():

@@ -34,3 +34,13 @@ def test_all_algorithms_match_oracles_4dev():
     r = _run(os.path.join(HERE, "helpers", "validate_collectives.py"),
              {"XLA_FLAGS": "--xla_force_host_platform_device_count=4"})
     assert r.returncode == 0, f"STDOUT:\n{r.stdout[-4000:]}\nERR:\n{r.stderr[-2000:]}"
+
+
+def test_hierarchical_composition_matches_global_sum_8dev():
+    """reduce-scatter(inner) / all-reduce(outer) / all-gather(inner) over a
+    2x4 (pod, data) mesh equals the global sum, for flat, static and
+    hierarchical decision sources."""
+    r = _run(os.path.join(HERE, "helpers", "validate_hierarchical.py"))
+    assert r.returncode == 0, \
+        f"STDOUT:\n{r.stdout[-4000:]}\nERR:\n{r.stderr[-2000:]}"
+    assert "FAILS: 0" in r.stdout

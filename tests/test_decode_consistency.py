@@ -151,3 +151,57 @@ def test_encdec_decode_matches_teacher_forcing():
         np.testing.assert_allclose(np.asarray(logits),
                                    np.asarray(full[:, i]), atol=5e-3,
                                    rtol=5e-3, err_msg=f"pos {i}")
+
+
+# ---------------------------------------------------------------------------
+# tuned tensor-parallel decode (serving consumes the decision artifact)
+# ---------------------------------------------------------------------------
+def test_tp_decode_bit_identical_2dev():
+    """The tuned TP decode path (vocab-parallel all-gather and partial-sum
+    all-reduce, each under several tuned algorithms) produces logits
+    BIT-identical to the plain untuned decode loop. Multi-device, so it
+    runs the helper as a subprocess."""
+    import os
+    import subprocess
+    import sys
+    here = os.path.dirname(__file__)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(here, "..", "src")
+    r = subprocess.run(
+        [sys.executable, os.path.join(here, "helpers",
+                                      "validate_tp_decode.py")],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, \
+        f"STDOUT:\n{r.stdout[-4000:]}\nERR:\n{r.stderr[-2000:]}"
+    assert "FAILS: 0" in r.stdout
+
+
+def test_tp_decode_single_device_wiring():
+    """In-process sanity at p=1: the tuned TP step is exactly the plain
+    step (gather of the only shard / sum of one partial), so the wiring
+    itself cannot perturb logits."""
+    from repro import compat
+    from repro.configs import get_config
+    from repro.core.collectives.api import CollectiveSpec, StaticDecision
+    from repro.launch.tp_decode import build_tp_decode_step
+    from repro.models.registry import build_model
+
+    cfg = get_config("smollm-135m").reduced()
+    api = build_model(cfg, attn_impl="xla")
+    params = api.init(jax.random.PRNGKey(0))
+    mesh = compat.make_mesh((1,), ("model",))
+    B, S = 2, 5
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+
+    plain = jax.jit(api.decode_step)
+    for collective in ("all_gather", "all_reduce"):
+        step = build_tp_decode_step(
+            api, mesh, StaticDecision(CollectiveSpec("ring", 1)),
+            collective=collective)
+        cache_a = api.init_cache(B, S)
+        cache_b = api.init_cache(B, S)
+        for i in range(S):
+            la, cache_a = plain(params, cache_a, tokens[:, i:i + 1])
+            lb, cache_b = step(params, cache_b, tokens[:, i:i + 1])
+            assert (np.asarray(la) == np.asarray(lb)).all(), \
+                f"{collective} pos {i}"

@@ -47,3 +47,38 @@ def test_serve_cli():
               "--batch", "2", "--prompt-len", "8", "--gen", "8"])
     assert r.returncode == 0, r.stdout + r.stderr
     assert "tok/s" in r.stdout
+
+
+def test_serve_cli_tp_tuned_2dev():
+    """Serving consumes the decision artifact in the decode loop (not just
+    the printed plan) via the tuned tensor-parallel path."""
+    art = os.path.join(HERE, "..", "examples", "artifacts",
+                       "tuned_decision.json")
+    r = _run(["repro.launch.serve", "--arch", "smollm-135m", "--reduced",
+              "--batch", "2", "--prompt-len", "8", "--gen", "8",
+              "--tensor-parallel", "2", "--tuning-table", art],
+             xla_devices=2)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "tensor-parallel decode: p=2 via tuned all_gather" in r.stdout
+    assert "decode plan p=2" in r.stdout
+    assert "tok/s" in r.stdout
+
+
+def test_train_cli_hierarchical_topology_8dev(tmp_path):
+    """--topology + a schema-3 artifact routes gradient sync through the
+    per-level reduce-scatter / all-reduce / all-gather composition."""
+    import sys as _sys
+    _sys.path.insert(0, SRC)
+    from repro.core.topology import Topology, tune_topology
+    topo = Topology.two_level(4, 2)
+    dec, _ = tune_topology(topo, ms=tuple(1024 * 16 ** i for i in range(4)))
+    art = str(tmp_path / "hier.json")
+    dec.save(art)
+    r = _run(["repro.launch.train", "--arch", "smollm-135m", "--reduced",
+              "--steps", "2", "--seq", "64", "--batch", "8",
+              "--topology", "2x4", "--tuning-table", art],
+             xla_devices=8)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "topology: cross_pod(2) > intra_pod(4)" in r.stdout
+    assert "hierarchical, levels=['intra_pod', 'cross_pod']" in r.stdout
+    assert "'pod': 2" in r.stdout and "step    1" in r.stdout

@@ -1,0 +1,288 @@
+"""Topology subsystem: the level model, probe-derived profiles, per-level
+tuning, the schema-3 multi-profile artifact, the hierarchical cost model,
+and the tuned-hierarchical vs tuned-flat acceptance property."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.analytical import (
+    DEFAULT_HOCKNEY,
+    Hockney,
+    best_hierarchical,
+    collective_cost,
+    flat_vs_hierarchical,
+    hierarchical_allreduce_cost,
+)
+from repro.core.topology import (
+    DEFAULT_LEVEL_PROFILES,
+    HierarchicalDecision,
+    MeshLevel,
+    MultiProfileArtifact,
+    Topology,
+    decided_hierarchical_methods,
+    flat_time,
+    hierarchical_allreduce_time,
+    load_decision,
+    optimal_machine_allreduce_time,
+    probe_profile,
+    profile_distance,
+    tune_topology,
+)
+from repro.core.tuning import (
+    NetworkProfile,
+    NetworkSimulator,
+    SimulatorBackend,
+    TuningSession,
+    make_tuner,
+)
+from repro.core.tuning.decision import DecisionTable, TableMeta
+from repro.core.tuning.space import Method, methods_for
+
+MS = tuple(1024 * 16 ** i for i in range(4))
+
+
+# ---------------------------------------------------------------------------
+# Topology model
+# ---------------------------------------------------------------------------
+def test_from_spec_levels_and_naming():
+    topo = Topology.from_spec("2x16")           # 2 pods of 16, outermost 1st
+    assert topo.names() == ("intra_pod", "cross_pod")
+    assert topo.inner.size == 16 and topo.outer.size == 2
+    assert topo.total_size == 32
+    assert topo.inner.axis == "data" and topo.outer.axis == "pod"
+
+    three = Topology.from_spec("2x16x16")
+    assert three.names() == ("intra_host", "intra_pod", "cross_pod")
+    assert three.total_size == 512
+
+    with pytest.raises(ValueError):
+        Topology.from_spec("2x2x2x2")
+
+
+def test_flat_profile_is_bottleneck_level():
+    topo = Topology.two_level(8, 2)
+    assert topo.flat_profile() is topo.level("cross_pod").profile
+    assert topo.flat_profile().byte_time \
+        > topo.level("intra_pod").profile.byte_time
+
+
+def test_topology_json_roundtrip(tmp_path):
+    topo = Topology.two_level(8, 4)
+    path = str(tmp_path / "topo.json")
+    topo.save(path)
+    loaded = Topology.load(path)
+    assert loaded == topo
+
+
+def test_probe_profile_recovers_fabric():
+    """Probing a simulated link recovers its launch/byte_time well enough
+    for artifact profile matching."""
+    true = NetworkProfile(launch=5e-6, byte_time=4e-10, seed=11)
+    sim = NetworkSimulator(true)
+    # 2-rank binomial broadcast = one point-to-point transfer
+    measure = lambda m: float(np.mean(
+        sim.measure("broadcast", "binomial", 2, m, trials=5)))
+    probed = probe_profile(measure)
+    assert probed.byte_time == pytest.approx(true.byte_time, rel=0.15)
+    assert probed.launch == pytest.approx(true.launch, rel=0.5)
+    # near its own fabric, far from a 20x-different one
+    d_own = profile_distance(dataclasses.asdict(probed),
+                             dataclasses.asdict(true))
+    d_far = profile_distance(
+        dataclasses.asdict(probed),
+        dataclasses.asdict(dataclasses.replace(true, byte_time=8e-9)))
+    assert d_own < d_far
+
+
+# ---------------------------------------------------------------------------
+# per-level tuning -> HierarchicalDecision
+# ---------------------------------------------------------------------------
+def _tuned(topology):
+    dec, reports = tune_topology(topology, ms=MS)
+    return dec, reports
+
+
+def test_tune_topology_one_table_per_level():
+    topo = Topology.two_level(8, 2)
+    dec, reports = _tuned(topo)
+    assert dec.names() == ["intra_pod", "cross_pod"]
+    # inner level tuned scatter/gather ops at the inner fan-out only
+    inner = dec.table_for("intra_pod")
+    assert {op for (op, p, m) in inner.table} \
+        == {"reduce_scatter", "all_gather", "all_reduce"}
+    assert {p for (_, p, _) in inner.table} == {8}
+    # outer level tuned all_reduce at the pod count
+    outer = dec.table_for("cross_pod")
+    assert {op for (op, p, m) in outer.table} == {"all_reduce"}
+    assert {p for (_, p, _) in outer.table} == {2}
+    # per-level provenance travels with each table
+    assert inner.meta.profile["byte_time"] \
+        == pytest.approx(topo.inner.profile.byte_time)
+    assert outer.meta.profile["byte_time"] \
+        == pytest.approx(topo.outer.profile.byte_time)
+    assert reports["intra_pod"][0].n_experiments > 0
+
+
+def test_hierarchical_decision_level_addressing():
+    dec = HierarchicalDecision([
+        ("intra_pod", DecisionTable({("all_reduce", 8, 1024):
+                                     Method("ring", 2)})),
+        ("cross_pod", DecisionTable({("all_reduce", 2, 1024):
+                                     Method("recursive_doubling", 1)})),
+    ])
+    assert dec.spec_for_level("cross_pod", "all_reduce", 1024, 2) \
+        .algorithm == "recursive_doubling"
+    assert dec.spec_for_level(-1, "all_reduce", 1024, 2) \
+        .algorithm == "recursive_doubling"
+    # the flat DecisionSource protocol answers from the innermost level
+    assert dec.spec_for("all_reduce", 1024, 8).algorithm == "ring"
+    with pytest.raises(KeyError):
+        dec.table_for("nope")
+
+
+# ---------------------------------------------------------------------------
+# schema-3 multi-profile artifact
+# ---------------------------------------------------------------------------
+def test_schema3_roundtrip_and_profile_selection(tmp_path):
+    topo = Topology.two_level(4, 2)
+    dec, _ = _tuned(topo)
+    path = str(tmp_path / "hier.json")
+    dec.save(path)
+
+    with open(path) as f:
+        doc = json.load(f)
+    assert doc["schema"] == 3 and doc["kind"] == "hierarchical"
+    assert [p["name"] for p in doc["profiles"]] \
+        == ["intra_pod", "cross_pod"]
+
+    # load_decision reconstructs the hierarchical source intact
+    loaded = load_decision(path)
+    assert isinstance(loaded, HierarchicalDecision)
+    for name in ("intra_pod", "cross_pod"):
+        assert loaded.table_for(name).table == dec.table_for(name).table
+
+    # multi-backend selection: a probe of the cross-pod fabric picks the
+    # cross-pod table out of the same artifact
+    art = MultiProfileArtifact.load(path)
+    name, table = art.select(topo.outer.profile)
+    assert name == "cross_pod"
+    name, _ = art.select(topo.inner.profile)
+    assert name == "intra_pod"
+    # no probe -> first profile; probe with no recorded fabric -> error
+    assert art.select(None)[0] == "intra_pod"
+    bare = MultiProfileArtifact(
+        [("x", DecisionTable({("all_reduce", 2, 1024): Method("ring", 1)}))])
+    with pytest.raises(ValueError, match="fabric"):
+        bare.select(topo.inner.profile)
+
+
+def test_single_level_hierarchical_roundtrip_keeps_type(tmp_path):
+    """A 1-level topology still round-trips as a HierarchicalDecision —
+    save -> load must not silently degrade to a flat DecisionTable."""
+    topo = Topology.single_level(4)
+    dec, _ = tune_topology(topo, ms=MS)
+    path = str(tmp_path / "one.json")
+    dec.save(path)
+    loaded = load_decision(path)
+    assert isinstance(loaded, HierarchicalDecision)
+    assert loaded.names() == ["intra_pod"]
+    assert loaded.table_for("intra_pod").table \
+        == dec.table_for("intra_pod").table
+
+
+def test_schema2_and_legacy_artifacts_still_load(tmp_path):
+    table = DecisionTable({("all_reduce", 4, 1024): Method("ring", 2)},
+                          meta=TableMeta(tuner="exhaustive"))
+    p2 = str(tmp_path / "flat.json")
+    table.save(p2)
+    loaded = load_decision(p2)
+    assert isinstance(loaded, DecisionTable)
+    assert loaded.table == table.table
+
+    legacy = str(tmp_path / "legacy.json")
+    with open(legacy, "w") as f:
+        json.dump([{"op": "all_reduce", "p": 4, "m": 1024,
+                    "algorithm": "ring", "segments": 2}], f)
+    loaded = load_decision(legacy)
+    assert loaded.table == table.table
+
+    art = MultiProfileArtifact.load(p2)
+    assert art.names() == ["default"]
+
+
+def test_schema3_rejects_corruption(tmp_path):
+    path = str(tmp_path / "bad.json")
+    with open(path, "w") as f:
+        json.dump({"schema": 4, "profiles": []}, f)
+    with pytest.raises(ValueError, match="schema"):
+        MultiProfileArtifact.load(path)
+    with open(path, "w") as f:
+        json.dump({"schema": 3, "profiles": []}, f)
+    with pytest.raises(ValueError, match="profiles"):
+        MultiProfileArtifact.load(path)
+    with open(path, "w") as f:
+        json.dump({"schema": 3, "profiles": [
+            {"name": "x", "rows": [{"op": "all_reduce"}]}]}, f)
+    with pytest.raises(ValueError, match="corrupt"):
+        MultiProfileArtifact.load(path)
+
+
+# ---------------------------------------------------------------------------
+# hierarchical cost model
+# ---------------------------------------------------------------------------
+def test_hierarchical_cost_sums_phases():
+    inner = DEFAULT_HOCKNEY
+    outer = Hockney(alpha=8e-6, beta=DEFAULT_HOCKNEY.beta * 20)
+    levels = [(8, inner), (2, outer)]
+    m = float(1 << 20)
+    methods = {(0, "reduce_scatter"): ("ring", 1),
+               (1, "all_reduce"): ("recursive_doubling", 1),
+               (0, "all_gather"): ("ring", 1)}
+    got = hierarchical_allreduce_cost(levels, m, methods)
+    want = (collective_cost("reduce_scatter", "ring", inner, 8, m)
+            + collective_cost("all_reduce", "recursive_doubling", outer, 2,
+                              m / 8)
+            + collective_cost("all_gather", "ring", inner, 8, m / 8))
+    assert got == pytest.approx(want)
+    # model-optimal picks can only be cheaper
+    t_best, picks = best_hierarchical(levels, m)
+    assert t_best <= got * (1 + 1e-9)
+    assert set(picks) == {(0, "reduce_scatter"), (1, "all_reduce"),
+                          (0, "all_gather")}
+
+
+def test_model_predicts_hierarchy_wins_on_slow_outer_links():
+    inner = DEFAULT_HOCKNEY
+    outer = Hockney(alpha=8e-6, beta=DEFAULT_HOCKNEY.beta * 20)
+    flat, hier = flat_vs_hierarchical(outer, [(8, inner), (2, outer)],
+                                      float(4 << 20))
+    assert hier < flat
+
+
+# ---------------------------------------------------------------------------
+# acceptance property: tuned-hierarchical beats tuned-flat on 2 levels
+# ---------------------------------------------------------------------------
+def test_tuned_hierarchical_penalty_beats_tuned_flat():
+    topo = Topology.two_level(8, 2)
+    hier, _ = _tuned(topo)
+    flat_sess = TuningSession(
+        SimulatorBackend(NetworkSimulator(topo.flat_profile())), trials=3)
+    flat_table = TuningSession.best(flat_sess.fit_all(
+        [make_tuner("exhaustive", ("all_reduce",), (topo.total_size,),
+                    MS)])).table
+
+    pen_h, pen_f = [], []
+    for m in MS:
+        opt = optimal_machine_allreduce_time(topo, m)
+        meth = flat_table.decide("all_reduce", topo.total_size, m)
+        t_flat = flat_time(topo, "all_reduce", meth, m)
+        t_hier = hierarchical_allreduce_time(
+            topo, decided_hierarchical_methods(hier, topo, m), m)
+        pen_f.append((t_flat - opt) / opt)
+        pen_h.append((t_hier - opt) / opt)
+    assert np.mean(pen_h) <= np.mean(pen_f)
+    # and the hierarchy is not just "no worse": on the biggest message the
+    # flat schedule pays the cross-pod links for the full buffer
+    assert pen_h[-1] < pen_f[-1]
