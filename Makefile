@@ -7,11 +7,15 @@
 #                 (first run pays cold compiles, ~2 min).
 #   make test   - the full tier-1 suite (~8 min).
 #   make bench  - every benchmark table (CSV to stdout).
+#   make bench-smoke - hierarchy_vs_flat + tuner_budget in reduced-size
+#                 mode (BENCH_SMOKE=1): the perf assertions (tuned-hier
+#                 beats tuned-flat; shared cache beats cold) in seconds,
+#                 for CI.
 PY ?= python
 export JAX_COMPILATION_CACHE_DIR ?= $(CURDIR)/.jax_cache
 export JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS ?= 0
 
-.PHONY: check test bench
+.PHONY: check test bench bench-smoke
 
 check:
 	PYTHONPATH=src $(PY) -m pytest -q -m "not slow"
@@ -21,3 +25,7 @@ test:
 
 bench:
 	PYTHONPATH=src:. $(PY) benchmarks/run.py
+
+bench-smoke:
+	BENCH_SMOKE=1 PYTHONPATH=src:. $(PY) benchmarks/run.py \
+		--only hierarchy_vs_flat tuner_budget

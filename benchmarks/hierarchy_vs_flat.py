@@ -21,6 +21,7 @@ CSV rows: ``hierarchy_vs_flat/<pods>x<inner>/<m>/<strategy>, us, penalty``.
 """
 from __future__ import annotations
 
+import os
 import sys
 from pathlib import Path
 
@@ -44,9 +45,12 @@ from repro.core.tuning import (
 )
 from repro.core.tuning.space import Method
 
-POD_COUNTS = (2, 4, 8)
-INNER = 8
-MESSAGE_SIZES = tuple(4096 * 16 ** i for i in range(4))   # 4 KB .. 16 MB
+#: BENCH_SMOKE=1 (the `make bench-smoke` CI tier) shrinks the sweep so the
+#: perf assertion stays green without a manual multi-minute run
+SMOKE = os.environ.get("BENCH_SMOKE") == "1"
+POD_COUNTS = (2,) if SMOKE else (2, 4, 8)
+INNER = 4 if SMOKE else 8
+MESSAGE_SIZES = tuple(4096 * 16 ** i for i in range(2 if SMOKE else 4))
 TUNERS = ("exhaustive",)
 
 

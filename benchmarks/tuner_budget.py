@@ -11,6 +11,8 @@ Two framings of the survey's central trade-off:
 Derived fields: new experiments, cache hits, and the true-simulator mean
 penalty of the resulting DecisionTable.
 """
+import os
+
 from repro.core.tuning import (
     NetworkProfile,
     NetworkSimulator,
@@ -23,13 +25,17 @@ from repro.core.tuning.space import Point
 
 from benchmarks.common import row
 
-OPS = ("all_reduce", "all_gather", "broadcast")
-PS = (4, 16, 64)
-MS = tuple(1024 * 4 ** i for i in range(6))
+#: BENCH_SMOKE=1 (the `make bench-smoke` CI tier) shrinks the grid and the
+#: tuner roster so the cold-vs-shared comparison runs in seconds
+SMOKE = os.environ.get("BENCH_SMOKE") == "1"
+OPS = ("all_reduce",) if SMOKE else ("all_reduce", "all_gather", "broadcast")
+PS = (4, 16) if SMOKE else (4, 16, 64)
+MS = tuple(1024 * 4 ** i for i in range(3 if SMOKE else 6))
 PTS = [Point(o, p, m) for o in OPS for p in PS for m in MS]
 
-NAMES = ("exhaustive", "thinned", "smgd", "regression", "ann",
-         "decision_tree", "quadtree", "octree", "star", "feedback")
+NAMES = ("exhaustive", "regression", "star") if SMOKE else \
+    ("exhaustive", "thinned", "smgd", "regression", "ann",
+     "decision_tree", "quadtree", "octree", "star", "feedback")
 
 
 def _session():

@@ -79,7 +79,6 @@ if __name__ == "__main__":
         decided_hierarchical_methods,
         flat_time,
         hierarchical_allreduce_time,
-        load_decision,
         tune_topology,
     )
     from repro.core.tuning.space import Method
@@ -100,8 +99,24 @@ if __name__ == "__main__":
           f"({t_xla / t_hier:.1f}x)")
 
     hier.save("hierarchical_decision.json")
-    reloaded = load_decision("hierarchical_decision.json")
     print("hierarchical artifact -> hierarchical_decision.json "
-          f"(schema 3, levels={reloaded.names()}; use: python -m "
-          "repro.launch.train --topology 2x4 --tuning-table "
-          "hierarchical_decision.json)")
+          "(schema 3; use: python -m repro.launch.train --topology 2x4 "
+          "--tuning-table hierarchical_decision.json)")
+
+    # -- consumption: one Communicator owns probe -> select -> decide -------
+    from repro.comms import CollectiveRequest, Communicator
+
+    print("\n== Communicator: the single tuned-dispatch entry point ==")
+    for art in ("tuned_decision.json", "hierarchical_decision.json"):
+        comm = Communicator.create(artifact=art)
+        print(f"{art}: {comm.describe()}")
+        # explain() renders exactly the {algorithm, segments, level} the
+        # launchers will execute for these messages
+        print(comm.explain([
+            CollectiveRequest("all_reduce", 4 << 20, axis="data",
+                              axis_size=4, dtype="float32"),
+            CollectiveRequest("all_gather", 64 << 10, axis="data",
+                              axis_size=4, dtype="bfloat16"),
+        ]).render())
+    print("(launchers build the same object: --tuning-table selects the "
+          "artifact, --probe-fabric probes the live fabric first)")

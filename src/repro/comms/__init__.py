@@ -1,0 +1,11 @@
+"""`repro.comms` — the one tuned-collective API.
+
+`Communicator.create(...)` resolves probe -> select -> decide -> dispatch
+once per launch; every consumer (train steps, serve decode, TP decode,
+MoE all-to-all, benchmarks) dispatches through its op methods and can ask
+`explain()` why any schedule was chosen.
+"""
+from repro.comms.communicator import Communicator
+from repro.comms.probe import probe_live_profile
+from repro.comms.report import PlanEntry, PlanReport
+from repro.comms.request import CollectiveRequest

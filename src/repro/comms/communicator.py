@@ -1,0 +1,551 @@
+"""`Communicator`: one tuned-collective API owning probe -> select ->
+decide -> dispatch.
+
+Constructed ONCE per launch, it resolves the whole decision stack that
+call sites used to re-assemble by hand:
+
+  1. **probe** — optionally time the live fabric
+     (``repro.comms.probe.probe_live_profile``);
+  2. **select** — for a multi-backend schema-3 artifact, pick the
+     `DecisionTable` whose recorded `NetworkProfile` best fits the probe
+     (`MultiProfileArtifact.select`) instead of first-table-wins;
+  3. **decide** — key every dispatch on a `CollectiveRequest` (the
+     survey's richer feature vector), degrading to the legacy
+     (op, nbytes, axis_size) 3-tuple for existing schema-2/3 artifacts;
+  4. **dispatch** — execute the chosen {algorithm, segments} through the
+     shard_map algorithm registry, flat or as a two-axis hierarchical
+     composition (HiCCL-style).
+
+Every decision is explainable: `explain(requests)` resolves through
+EXACTLY the lookup path the executing ops use and returns a `PlanReport`
+(PICO's explainability requirement).
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+
+from repro.comms.report import PlanEntry, PlanReport
+from repro.comms.request import CollectiveRequest
+from repro.core.collectives.algorithms import ALGORITHMS
+from repro.core.collectives.dispatch import CollectiveSpec, apply_collective
+from repro.core.collectives.hierarchical import (
+    hierarchical_all_gather,
+    hierarchical_all_reduce,
+    hierarchical_reduce_scatter,
+    sync_gradients_hierarchical,
+)
+
+_XLA_SPEC = CollectiveSpec("xla", 1)
+
+
+def _supported(op: str, algorithm: str) -> bool:
+    return algorithm in ALGORITHMS.get(op, {})
+
+
+# ---------------------------------------------------------------------------
+# decision policies (internal): each resolves one flat request
+# ---------------------------------------------------------------------------
+class _XlaPolicy:
+    kind = "xla"
+
+    def resolve(self, req: CollectiveRequest) -> PlanEntry:
+        return PlanEntry(req, _XLA_SPEC, source="xla")
+
+    def level_spec(self, level, op, nbytes, p) -> CollectiveSpec:
+        return _XLA_SPEC
+
+    def describe(self) -> str:
+        return "xla"
+
+
+class _StaticPolicy:
+    """Fixed algorithm; segment count derived PER LEAF as
+    ceil(nbytes / segment_bytes) — a 64 MB gradient pipelines in more
+    slices than a 4 KB bias, which one frozen segment count cannot
+    express."""
+
+    kind = "static"
+
+    def __init__(self, algorithm: str, segment_bytes: int = 0,
+                 spec: Optional[CollectiveSpec] = None):
+        self.algorithm = algorithm
+        self.segment_bytes = max(0, int(segment_bytes))
+        self.spec = spec.normalized() if spec else None
+
+    def resolve(self, req: CollectiveRequest) -> PlanEntry:
+        if self.spec is not None:
+            spec, src = self.spec, "static"
+        else:
+            segments = 1 if not self.segment_bytes else max(
+                1, math.ceil(req.nbytes / self.segment_bytes))
+            spec, src = CollectiveSpec(self.algorithm, segments), "static"
+        if not _supported(req.op, spec.algorithm):
+            # a static gradient algorithm ("ring") need not exist for every
+            # op the facade serves (e.g. broadcast); degrade loudly in the
+            # plan rather than KeyError at trace time
+            return PlanEntry(req, _XLA_SPEC, source="static(xla-fallback)")
+        return PlanEntry(req, spec, source=src)
+
+    def level_spec(self, level, op, nbytes, p) -> CollectiveSpec:
+        return self.resolve(CollectiveRequest(op, nbytes, axis_size=p)).spec
+
+    def describe(self) -> str:
+        if self.spec is not None:
+            return f"static:{self.spec.algorithm}/seg={self.spec.segments}"
+        seg = f"/segment_bytes={self.segment_bytes}" if self.segment_bytes \
+            else ""
+        return f"static:{self.algorithm}{seg}"
+
+
+class _TablePolicy:
+    """One flat `DecisionTable` — schema-2, legacy, or the profile selected
+    out of a multi-backend schema-3 artifact."""
+
+    kind = "table"
+
+    def __init__(self, table, profile_name: str = "default",
+                 probed: bool = False):
+        self.table = table
+        self.profile_name = profile_name
+        self.probed = probed
+
+    def resolve(self, req: CollectiveRequest) -> PlanEntry:
+        op, nbytes, p = req.key3()
+        meth = self.table.decide(op, p, nbytes)
+        spec = CollectiveSpec(meth.algorithm, meth.segments).normalized()
+        tuner = self.table.meta.tuner if self.table.meta else "?"
+        return PlanEntry(req, spec, source=f"table:{tuner}")
+
+    def level_spec(self, level, op, nbytes, p) -> CollectiveSpec:
+        return self.resolve(CollectiveRequest(op, nbytes, axis_size=p)).spec
+
+    def describe(self) -> str:
+        meta = self.table.meta
+        sel = f", profile={self.profile_name}" + \
+            (" [probed]" if self.probed else "") \
+            if self.profile_name != "default" or self.probed else ""
+        if meta:
+            return (f"tuner={meta.tuner} n_experiments={meta.n_experiments} "
+                    f"penalty={meta.penalty}{sel}")
+        return f"table{sel}"
+
+
+#: which topology level carries each mesh axis's collectives, for
+#: artifacts whose levels use the canonical names
+_AXIS_LEVEL = {"model": "intra_host", "data": "intra_pod",
+               "pod": "cross_pod"}
+
+
+class _HierPolicy:
+    """A `HierarchicalDecision`: one table per topology level. A flat
+    request answers from the level that carries its mesh axis (a 3-level
+    artifact's intra_host tier serves the "model" axis, not the data
+    axis's intra_pod), falling back to the innermost table;
+    ``level``-pinned requests and the composition phases address their
+    own level."""
+
+    kind = "hier"
+
+    def __init__(self, hier, topology=None):
+        self.hier = hier
+        self.topology = topology
+        names = hier.names()
+        # gradient-composition defaults, by canonical name when present
+        self.inner_level: Union[int, str] = \
+            "intra_pod" if "intra_pod" in names else 0
+        self.outer_level: Union[int, str] = \
+            "cross_pod" if "cross_pod" in names else -1
+
+    def _level_name(self, level) -> str:
+        names = self.hier.names()
+        return names[level] if isinstance(level, int) else level
+
+    def _level_for(self, req: CollectiveRequest) -> Union[int, str]:
+        if req.level is not None:
+            return req.level
+        names = self.hier.names()
+        axis = req.axis if isinstance(req.axis, str) else None
+        if axis is not None:
+            if self.topology is not None:
+                for lv in self.topology.levels:
+                    if lv.axis == axis and lv.name in names:
+                        return lv.name
+            mapped = _AXIS_LEVEL.get(axis)
+            if mapped in names:
+                return mapped
+        return 0
+
+    def resolve(self, req: CollectiveRequest) -> PlanEntry:
+        level = self._level_for(req)
+        op, nbytes, p = req.key3()
+        spec = self.hier.spec_for_level(level, op, nbytes, p)
+        name = self._level_name(level)
+        return PlanEntry(req, spec, level=name, source=f"hier:{name}")
+
+    def level_spec(self, level, op, nbytes, p) -> CollectiveSpec:
+        return self.hier.spec_for_level(level, op, nbytes, p)
+
+    def describe(self) -> str:
+        return f"hierarchical, levels={self.hier.names()}"
+
+
+# ---------------------------------------------------------------------------
+class Communicator:
+    """The single tuned-collective entry point.
+
+    Build once per launch with :meth:`create` (or :meth:`from_config` from
+    a `CollectiveConfig`), then call the op methods inside shard_map; they
+    look up each `CollectiveRequest` at trace time and execute the chosen
+    wire schedule. `sync_gradients` is the tree-level gradient path that
+    internally picks flat, psum-topped, or the full hierarchical
+    composition.
+    """
+
+    def __init__(self, mesh=None, *, policy=None, topology=None,
+                 probed=None, a2a_algorithm: str = "xla",
+                 artifact_path: Optional[str] = None):
+        self.mesh = mesh
+        self.topology = topology
+        self.probed = probed
+        self._policy = policy or _XlaPolicy()
+        self._a2a = a2a_algorithm or "xla"
+        self.artifact_path = artifact_path
+        axes = set(mesh.axis_names) if mesh is not None else set()
+        self._inner_axis = "data" if "data" in axes else None
+        self._outer_axis = "pod" if "pod" in axes else None
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def create(cls, mesh=None, *, topology=None, artifact=None,
+               probe: bool = False, static: Optional[CollectiveSpec] = None,
+               algorithm: str = "xla", segment_bytes: int = 0,
+               a2a_algorithm: str = "xla", probed=None) -> "Communicator":
+        """Resolve the full decision stack once.
+
+        artifact      a schema-2/3 artifact path or an already-loaded
+                      DecisionTable / HierarchicalDecision /
+                      MultiProfileArtifact;
+        probe         probe the live fabric and select the matching table
+                      from a multi-backend artifact (``probed`` injects a
+                      pre-measured NetworkProfile instead, e.g. in tests);
+        static        a fixed CollectiveSpec for every request;
+        algorithm / segment_bytes
+                      config-style static policy: fixed algorithm, segment
+                      count derived per message as ceil(nbytes/segment_bytes).
+        """
+        from repro.core.topology.decision import (
+            HierarchicalDecision,
+            MultiProfileArtifact,
+        )
+        from repro.core.tuning.decision import DecisionTable
+
+        if probe and probed is None:
+            from repro.comms.probe import probe_live_profile
+            probed = probe_live_profile()
+
+        path = None
+        if isinstance(artifact, str):
+            path = artifact
+            artifact = MultiProfileArtifact.load(artifact)
+        if isinstance(artifact, MultiProfileArtifact) \
+                and artifact.kind == "hierarchical":
+            artifact = HierarchicalDecision(artifact.profiles)
+
+        if isinstance(artifact, HierarchicalDecision):
+            policy = _HierPolicy(artifact, topology=topology)
+        elif isinstance(artifact, MultiProfileArtifact):
+            by_probe = probed is not None and any(
+                t.meta and t.meta.profile for _, t in artifact.profiles)
+            if probed is not None and not by_probe:
+                # nothing to match against (legacy / meta-less artifact):
+                # the first table is the only sensible choice — keep the
+                # launch alive rather than failing an optional probe flag
+                import warnings
+                warnings.warn(
+                    "--probe-fabric: no profile in the artifact records a "
+                    "fabric to match against; using the first table",
+                    RuntimeWarning, stacklevel=2)
+            if by_probe:
+                name, table = artifact.select(probed)
+            else:
+                name, table = artifact.select(None)
+            policy = _TablePolicy(table, name, probed=by_probe)
+        elif isinstance(artifact, DecisionTable):
+            policy = _TablePolicy(artifact)
+        elif artifact is not None:
+            raise TypeError(f"unsupported decision artifact: "
+                            f"{type(artifact).__name__}")
+        elif static is not None:
+            policy = _StaticPolicy(static.algorithm, spec=static)
+        elif algorithm != "xla":
+            policy = _StaticPolicy(algorithm, segment_bytes)
+        else:
+            policy = _XlaPolicy()
+        return cls(mesh, policy=policy, topology=topology, probed=probed,
+                   a2a_algorithm=a2a_algorithm, artifact_path=path)
+
+    @classmethod
+    def from_config(cls, coll, mesh=None, *, topology=None,
+                    probe: bool = False, probed=None) -> "Communicator":
+        """Build from a `CollectiveConfig` (the step builders' entry)."""
+        return cls.create(
+            mesh, topology=topology, artifact=coll.decision, probe=probe,
+            probed=probed, algorithm=coll.algorithm,
+            segment_bytes=coll.segment_bytes,
+            a2a_algorithm=coll.a2a_algorithm)
+
+    # -- introspection ------------------------------------------------------
+    @property
+    def is_tuned(self) -> bool:
+        """True when gradient sync must run the explicit shard_map path
+        (any non-XLA decision source)."""
+        return self._policy.kind != "xla"
+
+    @property
+    def hierarchical(self) -> bool:
+        return self._policy.kind == "hier"
+
+    def describe(self) -> str:
+        # "[probed]" appears only where the probe influenced selection
+        # (_TablePolicy appends it itself) — a hierarchical or static
+        # policy never consults the probe
+        d = self._policy.describe()
+        if self._a2a != "xla":
+            d += f", a2a={self._a2a}"
+        return d
+
+    # -- decision resolution ------------------------------------------------
+    def _resolve(self, req: CollectiveRequest) -> PlanEntry:
+        """One flat request -> the entry that will execute."""
+        if req.op == "all_to_all" and self._a2a != "xla":
+            # an explicit a2a algorithm (CLI / config) overrides the table:
+            # the user pinned the MoE dispatch schedule deliberately
+            return PlanEntry(req, CollectiveSpec(self._a2a, 1),
+                             source="static:a2a")
+        return self._policy.resolve(req)
+
+    def spec(self, req: CollectiveRequest) -> CollectiveSpec:
+        """The {algorithm, segments} this communicator executes for a flat
+        request — the lookup every op method performs."""
+        return self._resolve(req).spec
+
+    # legacy DecisionSource protocol (duck-typed): lets the Communicator
+    # drop into the per-level slots of the hierarchical compositions
+    def spec_for(self, op: str, nbytes: int, axis_size: int
+                 ) -> CollectiveSpec:
+        return self.spec(CollectiveRequest(op, nbytes, axis_size=axis_size))
+
+    def spec_for_level(self, level, op: str, nbytes: int, axis_size: int
+                       ) -> CollectiveSpec:
+        return self._policy.level_spec(level, op, nbytes, axis_size)
+
+    # -- planning / explainability ------------------------------------------
+    def _axis_sizes(self, req: CollectiveRequest) -> Tuple[int, int]:
+        inner_axis, outer_axis = req.axis
+        if self.mesh is not None:
+            return self.mesh.shape[inner_axis], self.mesh.shape[outer_axis]
+        raise ValueError("two-axis request needs a mesh")
+
+    def _composition_entries(self, req: CollectiveRequest
+                             ) -> List[PlanEntry]:
+        """A two-axis request's phases, with the exact byte counts the
+        hierarchical compositions look up: same element counts and
+        _flatten_pad padding as ``hierarchical_all_reduce`` /
+        ``hierarchical_reduce_scatter`` / ``hierarchical_all_gather``."""
+        di, do = self._axis_sizes(req)
+        itemsize = np.dtype(req.dtype).itemsize
+        n = req.nbytes // itemsize
+        il, ol = self._hier_levels()
+        ia, oa = req.axis
+
+        if req.op == "all_reduce":
+            padded = n + (-n) % di
+            shard = padded // di
+            phases = [("reduce_scatter", padded, ia, di, il),
+                      ("all_reduce", shard, oa, do, ol),
+                      ("all_gather", shard, ia, di, il)]
+        elif req.op == "reduce_scatter":
+            padded = n + (-n) % (di * do)
+            phases = [("reduce_scatter", padded, ia, di, il),
+                      ("reduce_scatter", padded // di, oa, do, ol)]
+        elif req.op == "all_gather":
+            phases = [("all_gather", n, oa, do, ol),
+                      ("all_gather", n * do, ia, di, il)]
+        else:
+            raise ValueError(f"no two-axis composition for {req.op!r}")
+
+        return [self._level_entry(
+            CollectiveRequest(op, elems * itemsize, axis=axis, axis_size=p,
+                              dtype=req.dtype, reduce_op=req.reduce_op,
+                              level=level), level)
+            for op, elems, axis, p, level in phases]
+
+    def _level_entry(self, req: CollectiveRequest, level) -> PlanEntry:
+        if self._policy.kind == "hier":
+            spec = self.spec_for_level(level, req.op, req.nbytes,
+                                       req.axis_size)
+            name = self._policy._level_name(level)
+            return PlanEntry(req, spec, level=name, source=f"hier:{name}")
+        return self._policy.resolve(req)
+
+    def plan(self, req: CollectiveRequest) -> List[PlanEntry]:
+        """The entries that will execute for one request, in order — a
+        two-axis request expands to its composition phases."""
+        if req.hierarchical:
+            return self._composition_entries(req)
+        return [self._resolve(req)]
+
+    def explain(self, requests: Sequence[CollectiveRequest]) -> PlanReport:
+        """Resolve requests through the exact lookup path the executing
+        ops use; renders the per-leaf {algorithm, segments, level} plan."""
+        entries: List[PlanEntry] = []
+        for req in requests:
+            entries.extend(self.plan(req))
+        return PlanReport(entries)
+
+    def gradient_requests(self, tree) -> List[CollectiveRequest]:
+        """One request per gradient leaf, shaped the way `sync_gradients`
+        will dispatch it (two-axis composition on a hierarchical multi-pod
+        communicator, flat otherwise)."""
+        out = []
+        hier = self.hierarchical and self._outer_axis is not None
+        axis = (self._inner_axis, self._outer_axis) if hier \
+            else self._inner_axis
+        p = self._data_parallel_size() if hier else self._inner_size()
+        for leaf in jax.tree.leaves(tree):
+            nbytes = int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+            out.append(CollectiveRequest(
+                "all_reduce", nbytes, axis=axis, axis_size=p,
+                dtype=np.dtype(leaf.dtype).name))
+        return out
+
+    def explain_gradients(self, tree) -> PlanReport:
+        """Per-leaf gradient-sync plan: the hierarchical composition's
+        phases, or the flat tuned all-reduce plus the cross-pod psum hop."""
+        entries: List[PlanEntry] = []
+        for req in self.gradient_requests(tree):
+            entries.extend(self.plan(req))
+            if not req.hierarchical and self._outer_axis is not None:
+                psum_req = CollectiveRequest(
+                    "all_reduce", req.nbytes, axis=self._outer_axis,
+                    axis_size=self.mesh.shape[self._outer_axis],
+                    dtype=req.dtype)
+                entries.append(PlanEntry(psum_req, _XLA_SPEC, source="psum"))
+        return PlanReport(entries)
+
+    # -- dispatch -----------------------------------------------------------
+    def _inner_size(self) -> int:
+        return self.mesh.shape[self._inner_axis] if self._inner_axis else 1
+
+    def _data_parallel_size(self) -> int:
+        n = self._inner_size()
+        if self._outer_axis:
+            n *= self.mesh.shape[self._outer_axis]
+        return n
+
+    def _axis_and_size(self, axis) -> Tuple[str, int]:
+        if axis is None:
+            axis = self._inner_axis
+        if axis is None or self.mesh is None:
+            raise ValueError("collective needs an axis (no mesh/data axis "
+                             "attached to this Communicator)")
+        return axis, self.mesh.shape[axis]
+
+    def _dispatch_flat(self, op, x, axis, *, reduce_op="add"):
+        axis, p = self._axis_and_size(axis)
+        req = CollectiveRequest.for_array(op, x, axis, p,
+                                          reduce_op=reduce_op)
+        return apply_collective(op, x, axis, p, self.spec(req),
+                                reduce_op=reduce_op)
+
+    def _hier_levels(self) -> Tuple[Union[int, str], Union[int, str]]:
+        if self._policy.kind == "hier":
+            return self._policy.inner_level, self._policy.outer_level
+        return 0, -1
+
+    def all_reduce(self, x, axis=None, *, reduce_op: str = "add"):
+        """Tuned all-reduce of the local buffer (inside shard_map). A
+        two-axis ``axis=(inner, outer)`` runs the hierarchical
+        reduce-scatter / all-reduce / all-gather composition."""
+        if isinstance(axis, tuple):
+            (ia, oa) = axis
+            il, ol = self._hier_levels()
+            return hierarchical_all_reduce(
+                x, ia, self.mesh.shape[ia], oa, self.mesh.shape[oa], self,
+                op=reduce_op, inner_level=il, outer_level=ol)
+        return self._dispatch_flat("all_reduce", x, axis,
+                                   reduce_op=reduce_op)
+
+    def reduce_scatter(self, x, axis=None, *, reduce_op: str = "add"):
+        """Tuned reduce-scatter (this rank's 1/p shard). A two-axis
+        ``axis`` composes reduce-scatter over both levels."""
+        if isinstance(axis, tuple):
+            (ia, oa) = axis
+            il, ol = self._hier_levels()
+            return hierarchical_reduce_scatter(
+                x, ia, self.mesh.shape[ia], oa, self.mesh.shape[oa], self,
+                op=reduce_op, inner_level=il, outer_level=ol)
+        return self._dispatch_flat("reduce_scatter", x, axis,
+                                   reduce_op=reduce_op)
+
+    def all_gather(self, x, axis=None):
+        """Tuned all-gather (p-times-larger concatenation). A two-axis
+        ``axis`` composes all-gather outer-then-inner (the inverse of the
+        two-axis reduce-scatter)."""
+        if isinstance(axis, tuple):
+            (ia, oa) = axis
+            il, ol = self._hier_levels()
+            return hierarchical_all_gather(
+                x, ia, self.mesh.shape[ia], oa, self.mesh.shape[oa], self,
+                inner_level=il, outer_level=ol)
+        return self._dispatch_flat("all_gather", x, axis)
+
+    def all_to_all(self, x, axis=None):
+        """Tuned all-to-all on a (p, chunk...) buffer."""
+        return self._dispatch_flat("all_to_all", x, axis)
+
+    def broadcast(self, x, axis=None):
+        """Tuned broadcast from rank 0."""
+        return self._dispatch_flat("broadcast", x, axis)
+
+    def a2a_algorithm_for(self, nbytes: int, axis: str, axis_size: int
+                          ) -> str:
+        """The all-to-all algorithm name for a dispatch buffer — the MoE
+        exchange keeps its own layout plumbing and only needs the name."""
+        return self.spec(CollectiveRequest("all_to_all", nbytes, axis=axis,
+                                           axis_size=axis_size)).algorithm
+
+    # -- tree-level gradient sync -------------------------------------------
+    def sync_gradients(self, grads, *, mean: bool = True):
+        """All-reduce every gradient leaf with its tuned algorithm,
+        picking the schedule the communicator resolved to: the full
+        hierarchical composition on a multi-pod mesh with a hierarchical
+        artifact, otherwise the flat tuned sync with a plain psum across
+        pods on top. Must be called inside shard_map (manual over the
+        data axes)."""
+        if self._inner_axis is None:
+            raise ValueError("sync_gradients needs a mesh with a 'data' "
+                             "axis")
+        denom = self._data_parallel_size()
+        inner, di = self._inner_axis, self._inner_size()
+        outer = self._outer_axis
+
+        if self.hierarchical and outer is not None:
+            il, ol = self._hier_levels()
+            return sync_gradients_hierarchical(
+                grads, inner, di, outer, self.mesh.shape[outer], self,
+                mean=mean, inner_level=il, outer_level=ol)
+
+        def sync_leaf(g):
+            out = self._dispatch_flat("all_reduce", g, inner)
+            if outer is not None:
+                out = jax.lax.psum(out, outer)
+            if mean:
+                out = out / denom
+            return out
+
+        return jax.tree.map(sync_leaf, grads)

@@ -1,0 +1,70 @@
+"""Live-fabric probing for artifact selection.
+
+A multi-backend (schema-3 "multi_profile") artifact ships one
+`DecisionTable` per fabric it was tuned on. Selecting the right table at
+launch needs a probe of the fabric the process actually runs on:
+``probe_live_profile`` times m-byte point-to-point transfers between two
+real devices (a jitted shard_map'd ``ppermute`` round) and fits
+``t = launch + byte_time * m`` through ``repro.core.topology.fit_profile``
+— the same relative-least-squares fit the offline tuning pipeline uses,
+so `MultiProfileArtifact.select`'s profile distance compares like with
+like.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.core.topology.model import PROBE_SIZES, fit_profile
+from repro.core.tuning.simulator import NetworkProfile
+
+_PROBE_AXIS = "probe"
+
+
+def _pingpong(ms: int):
+    """A jitted 2-rank exchange of an m-byte buffer (one ppermute round
+    each way, so the measured wall time is 2 transfers + dispatch)."""
+    n = max(1, ms // 4)                      # float32 elements
+
+    def inner(x):
+        fwd = jax.lax.ppermute(x, _PROBE_AXIS, [(0, 1), (1, 0)])
+        back = jax.lax.ppermute(fwd, _PROBE_AXIS, [(0, 1), (1, 0)])
+        return back
+
+    mesh = compat.make_mesh((2,), (_PROBE_AXIS,),
+                            devices=np.array(jax.devices()[:2]))
+    fn = jax.jit(compat.shard_map(inner, mesh=mesh, in_specs=P(),
+                                  out_specs=P(), check_vma=False))
+    x = jnp.zeros((n,), jnp.float32)
+    return fn, x
+
+
+def probe_live_profile(ms: Sequence[int] = PROBE_SIZES, *,
+                       trials: int = 3,
+                       base: Optional[NetworkProfile] = None
+                       ) -> Optional[NetworkProfile]:
+    """Probe the live fabric between the first two visible devices.
+
+    Returns the fitted `NetworkProfile`, or None when fewer than two
+    devices are attached (nothing to probe — callers fall back to the
+    artifact's first profile).
+    """
+    if jax.device_count() < 2:
+        return None
+    ts = []
+    for m in ms:
+        fn, x = _pingpong(m)
+        jax.block_until_ready(fn(x))         # compile + warm
+        best = float("inf")
+        for _ in range(trials):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(x))
+            best = min(best, time.perf_counter() - t0)
+        ts.append(best / 2.0)                # per one-way transfer
+    return fit_profile(list(ms), ts, base=base)

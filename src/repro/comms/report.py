@@ -1,0 +1,61 @@
+"""`PlanReport`: the explainable side of every `Communicator` dispatch.
+
+PICO's argument (PAPERS.md) is that a tuned runtime must be able to say
+WHY it picked a schedule. `Communicator.explain` resolves a list of
+`CollectiveRequest`s through exactly the lookup path the executing ops
+use and renders the per-leaf {algorithm, segments, level} choices — the
+serve launcher's decode-plan output and the dry-run's collective section
+are both this report.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+from repro.core.collectives.dispatch import CollectiveSpec
+from repro.comms.request import CollectiveRequest
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanEntry:
+    """One resolved dispatch decision: what executes, and why."""
+
+    request: CollectiveRequest
+    spec: CollectiveSpec
+    level: Optional[str] = None   # topology level name, hierarchical only
+    source: str = "xla"           # "xla" | "static" | "table:<name>" | ...
+
+    def render(self) -> str:
+        lvl = f" level={self.level}" if self.level else ""
+        return (f"{self.request.op:14s} {self.request.nbytes:>10d} B "
+                f"p={self.request.axis_size:<4d}-> "
+                f"{self.spec.algorithm} segments={self.spec.segments}"
+                f"{lvl} [{self.source}]")
+
+
+@dataclasses.dataclass
+class PlanReport:
+    """Ordered dispatch decisions for a set of requests. A hierarchical
+    composition expands to one entry per phase, in execution order."""
+
+    entries: List[PlanEntry]
+
+    def __iter__(self):
+        return iter(self.entries)
+
+    def __len__(self):
+        return len(self.entries)
+
+    def specs(self) -> List[CollectiveSpec]:
+        return [e.spec for e in self.entries]
+
+    def render(self, indent: str = "  ") -> str:
+        return "\n".join(indent + e.render() for e in self.entries)
+
+    def to_json(self) -> List[dict]:
+        return [{
+            "op": e.request.op, "nbytes": e.request.nbytes,
+            "axis_size": e.request.axis_size, "dtype": e.request.dtype,
+            "algorithm": e.spec.algorithm, "segments": e.spec.segments,
+            "level": e.level, "source": e.source,
+        } for e in self.entries]

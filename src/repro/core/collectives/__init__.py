@@ -1,15 +1,29 @@
+"""Collective algorithms, hierarchical compositions, and the stable
+dispatch value types.
+
+Tuned dispatch flows through `repro.comms.Communicator`; the old
+decision-source plumbing (`DecisionSource`, `StaticDecision`,
+`TableDecision`, `XLA_DECISION`, `sync_gradients`,
+`sync_gradients_reduce_scatter`) is deprecated at this package level too
+— accessing those names emits `DeprecationWarning` for one release, same
+as via ``repro.core.collectives.api``.
+"""
 from repro.core.collectives.algorithms import ALGORITHMS, get
+from repro.core.collectives.dispatch import (
+    DEPRECATED_ALIASES,
+    CollectiveSpec,
+    apply_collective,
+    deprecated_getattr,
+)
 from repro.core.collectives.hierarchical import (
+    hierarchical_all_gather,
     hierarchical_all_reduce,
+    hierarchical_reduce_scatter,
     sync_gradients_hierarchical,
 )
-from repro.core.collectives.api import (
-    XLA_DECISION,
-    CollectiveSpec,
-    DecisionSource,
-    StaticDecision,
-    TableDecision,
-    apply_collective,
-    sync_gradients,
-    sync_gradients_reduce_scatter,
-)
+
+__getattr__ = deprecated_getattr(__name__)
+
+
+def __dir__():
+    return sorted(list(globals()) + list(DEPRECATED_ALIASES))

@@ -1,115 +1,28 @@
-"""Tuned collective dispatch: the survey's {algorithm, segment size} decision
-applied at runtime.
+"""Deprecated public surface of the tuned-collective dispatch layer.
 
-`CollectiveSpec` is the paper's 2-tuple (§3: "the simplest of the parameter
-space consists of 2-tuples {algorithm, segment size}"). A `DecisionSource`
-maps (op, message bytes, axis size) -> CollectiveSpec; it may be a static
-config, a decision table produced by any tuner in ``repro.core.tuning``, or
-the XLA default. ``sync_gradients`` applies it per gradient leaf — message
-size varies per tensor, so different tensors legitimately pick different
-algorithms, exactly the survey's message-size-dependent selection.
+Tuned dispatch now flows through one object: `repro.comms.Communicator`,
+which owns the whole probe -> select -> decide -> dispatch stack. The
+`DecisionSource` hierarchy and the free-standing ``sync_gradients``
+helpers that used to live here are internal details
+(``repro.core.collectives.dispatch``), re-exported only so existing
+artifact-loading code and downstream snippets keep importing — every such
+access emits `DeprecationWarning` for one release.
+
+``CollectiveSpec`` and ``apply_collective`` remain public without a
+warning: they are the value type and the executor that `Communicator`
+itself hands out.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, Optional
+from repro.core.collectives.dispatch import (  # noqa: F401  (public, stable)
+    DEPRECATED_ALIASES,
+    CollectiveSpec,
+    apply_collective,
+    deprecated_getattr,
+)
 
-import jax
-import jax.numpy as jnp
-
-from repro.core.collectives import algorithms as alg
-
-
-@dataclasses.dataclass(frozen=True)
-class CollectiveSpec:
-    algorithm: str = "xla"
-    segments: int = 1
-
-    def normalized(self) -> "CollectiveSpec":
-        return CollectiveSpec(self.algorithm, max(1, int(self.segments)))
+__getattr__ = deprecated_getattr(__name__)
 
 
-class DecisionSource:
-    """Maps (op, nbytes, axis_size) -> CollectiveSpec."""
-
-    def spec_for(self, op: str, nbytes: int, axis_size: int) -> CollectiveSpec:
-        raise NotImplementedError
-
-
-class StaticDecision(DecisionSource):
-    def __init__(self, spec: CollectiveSpec):
-        self.spec = spec.normalized()
-
-    def spec_for(self, op, nbytes, axis_size):
-        return self.spec
-
-
-class TableDecision(DecisionSource):
-    """Wraps any tuner-produced decision function f(op, nbytes, p) -> (algo, segments)."""
-
-    def __init__(self, fn: Callable[[str, int, int], tuple]):
-        self.fn = fn
-
-    def spec_for(self, op, nbytes, axis_size):
-        a, s = self.fn(op, nbytes, axis_size)
-        return CollectiveSpec(a, s).normalized()
-
-
-XLA_DECISION = StaticDecision(CollectiveSpec("xla", 1))
-
-
-def apply_collective(op: str, x, axis: str, axis_size: int,
-                     spec: CollectiveSpec, **kw):
-    fn = alg.get(op, spec.algorithm)
-    if op in ("all_reduce", "reduce_scatter", "reduce"):
-        return fn(x, axis, axis_size, segments=spec.segments,
-                  op=kw.get("reduce_op", "add"))
-    return fn(x, axis, axis_size, segments=spec.segments)
-
-
-def sync_gradients(
-    grads,
-    axis: str,
-    axis_size: int,
-    decision: Optional[DecisionSource] = None,
-    *,
-    mean: bool = True,
-):
-    """All-reduce every gradient leaf with its tuned algorithm.
-
-    Must be called inside shard_map (manual over ``axis``).
-    """
-    decision = decision or XLA_DECISION
-
-    def sync_leaf(g):
-        nbytes = g.size * g.dtype.itemsize
-        spec = decision.spec_for("all_reduce", nbytes, axis_size)
-        out = apply_collective("all_reduce", g, axis, axis_size, spec)
-        if mean:
-            out = out / axis_size
-        return out
-
-    return jax.tree.map(sync_leaf, grads)
-
-
-def sync_gradients_reduce_scatter(
-    grads, axis: str, axis_size: int,
-    decision: Optional[DecisionSource] = None, *, mean: bool = True,
-):
-    """ZeRO-style sync: reduce-scatter each leaf (flat 1/p shard per rank).
-
-    Returns a tree of flat shards plus the original shapes; the optimizer can
-    run on shards and all-gather params afterwards (beyond-paper collective
-    schedule exercised in §Perf).
-    """
-    decision = decision or XLA_DECISION
-
-    def sync_leaf(g):
-        nbytes = g.size * g.dtype.itemsize
-        spec = decision.spec_for("reduce_scatter", nbytes, axis_size)
-        out = apply_collective("reduce_scatter", g, axis, axis_size, spec)
-        if mean:
-            out = out / axis_size
-        return out
-
-    return jax.tree.map(sync_leaf, grads)
+def __dir__():
+    return sorted(list(globals()) + list(DEPRECATED_ALIASES))

@@ -1,4 +1,4 @@
-"""Hierarchical collective composition over two mesh axes.
+"""Hierarchical collective compositions over two mesh axes.
 
 The production-library schedule for multi-pod all-reduce (HiCCL, NCCL
 tree/ring hybrids): reduce-scatter on the INNER axis (fast links carry the
@@ -8,8 +8,19 @@ full buffer), all-reduce on the OUTER axis (slow links carry only the
 phases tune against the ICI profile and the outer phase against the DCN
 profile.
 
+Beyond all-reduce, reduce-scatter and all-gather also compose over two
+axes:
+
+  * ``hierarchical_reduce_scatter`` — reduce-scatter(inner) then
+    reduce-scatter(outer): the cross-level shard at rank (outer o,
+    inner i) is global chunk ``i * outer_size + o`` (inner-major), each
+    1/(p_i*p_o) of the buffer, fully summed;
+  * ``hierarchical_all_gather`` — all-gather(outer) then
+    all-gather(inner): the exact inverse, reassembling those chunks into
+    the full buffer in original order.
+
 Functions run INSIDE shard_map (manual over both axes), same convention
-as ``repro.core.collectives.algorithms``. The composition is exact for
+as ``repro.core.collectives.algorithms``. The compositions are exact for
 op="add": reduce-scatter partial sums are disjoint, so the outer
 all-reduce and inner all-gather reassemble the same floating-point values
 a flat schedule would produce per shard.
@@ -21,7 +32,7 @@ from typing import Optional
 import jax
 
 from repro.core.collectives.algorithms import _flatten_pad, _unflatten
-from repro.core.collectives.api import (
+from repro.core.collectives.dispatch import (
     CollectiveSpec,
     DecisionSource,
     apply_collective,
@@ -79,6 +90,75 @@ def hierarchical_all_reduce(
     return _unflatten(full.reshape(-1), shape, size)
 
 
+def hierarchical_reduce_scatter(
+    x,
+    inner_axis: str,
+    inner_size: int,
+    outer_axis: str,
+    outer_size: int,
+    decision: Optional[DecisionSource] = None,
+    *,
+    op: str = "add",
+    inner_level=0,
+    outer_level=-1,
+):
+    """reduce-scatter(inner) -> reduce-scatter(outer).
+
+    Returns this rank's flat 1/(inner*outer) shard of the global sum.
+    Rank (outer o, inner i) holds global chunk ``i * outer_size + o`` of
+    the (zero-padded) flattened buffer — the layout
+    ``hierarchical_all_gather`` inverts. The inner phase carries the full
+    buffer on the fast links; the slow outer links only ever see the
+    1/p_inner partials.
+    """
+    itemsize = x.dtype.itemsize
+    flat, _, _ = _flatten_pad(x, inner_size * outer_size)
+
+    spec = _level_spec(decision, inner_level, "reduce_scatter",
+                       flat.size * itemsize, inner_size)
+    shard = apply_collective("reduce_scatter", flat, inner_axis, inner_size,
+                             spec, reduce_op=op).reshape(-1)
+
+    spec = _level_spec(decision, outer_level, "reduce_scatter",
+                       shard.size * itemsize, outer_size)
+    return apply_collective("reduce_scatter", shard, outer_axis, outer_size,
+                            spec, reduce_op=op).reshape(-1)
+
+
+def hierarchical_all_gather(
+    x,
+    inner_axis: str,
+    inner_size: int,
+    outer_axis: str,
+    outer_size: int,
+    decision: Optional[DecisionSource] = None,
+    *,
+    inner_level=0,
+    outer_level=-1,
+):
+    """all-gather(outer) -> all-gather(inner).
+
+    The inverse of ``hierarchical_reduce_scatter``: flat per-rank shards
+    come back as the full (inner*outer)-times-larger concatenation, chunks
+    ordered inner-major (rank (o, i)'s shard lands at index
+    ``i * outer_size + o``). The outer phase moves only the small shard
+    across the slow links before the fast inner links fan the pod-complete
+    chunks out.
+    """
+    itemsize = x.dtype.itemsize
+    flat = x.reshape(-1)
+
+    spec = _level_spec(decision, outer_level, "all_gather",
+                       flat.size * itemsize, outer_size)
+    chunk = apply_collective("all_gather", flat, outer_axis, outer_size,
+                             spec).reshape(-1)
+
+    spec = _level_spec(decision, inner_level, "all_gather",
+                       chunk.size * itemsize, inner_size)
+    return apply_collective("all_gather", chunk, inner_axis, inner_size,
+                            spec).reshape(-1)
+
+
 def sync_gradients_hierarchical(
     grads,
     inner_axis: str,
@@ -92,8 +172,8 @@ def sync_gradients_hierarchical(
     outer_level=-1,
 ):
     """Hierarchical all-reduce of every gradient leaf — the multi-pod
-    replacement for ``sync_gradients`` + cross-pod psum. Must be called
-    inside shard_map (manual over both axes)."""
+    replacement for flat sync + cross-pod psum. Must be called inside
+    shard_map (manual over both axes)."""
     denom = inner_size * outer_size
 
     def sync_leaf(g):

@@ -25,7 +25,7 @@ import json
 import math
 from typing import List, Optional, Sequence, Tuple, Union
 
-from repro.core.collectives.api import CollectiveSpec, DecisionSource
+from repro.core.collectives.dispatch import CollectiveSpec, DecisionSource
 from repro.core.tuning.decision import (
     SCHEMA_VERSION,
     DecisionTable,

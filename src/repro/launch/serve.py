@@ -2,9 +2,12 @@
 
 With ``--tensor-parallel N --tuning-table ART`` the decode loop runs the
 tuned tensor-parallel path: every token's logits assembly goes through the
-artifact's {algorithm, segments} choice for the all-gather (vocab-parallel
-shards) or all-reduce (partial sums) — bit-identical to the untuned loop,
-but executing the tuned wire schedule.
+`Communicator`'s {algorithm, segments} choice for the all-gather
+(vocab-parallel shards) or all-reduce (partial sums) — bit-identical to
+the untuned loop, but executing the tuned wire schedule. The printed
+decode plan is `Communicator.explain` over the same requests the step
+executes. ``--probe-fabric`` probes the live fabric first so a
+multi-backend artifact resolves to the matching profile's table.
 
 Examples:
     python -m repro.launch.serve --arch smollm-135m --reduced \\
@@ -47,35 +50,32 @@ def main():
     ap.add_argument("--tp-collective", default="all_gather",
                     choices=("all_gather", "all_reduce"),
                     help="which tuned collective assembles the TP logits")
+    ap.add_argument("--probe-fabric", action="store_true",
+                    help="probe the live fabric before selecting a table "
+                         "from a multi-backend artifact (instead of "
+                         "first-table-wins)")
     args = ap.parse_args()
 
     cfg = ARCHITECTURES[args.arch]
     if args.reduced:
         cfg = cfg.reduced()
 
-    decision = None
+    from repro.comms import Communicator
+    comm = None
     if args.tuning_table:
-        from repro.core.collectives.api import TableDecision
-        from repro.core.topology import HierarchicalDecision, load_decision
         from repro.launch.tp_decode import tp_decode_plan
-        loaded = load_decision(args.tuning_table)
-        if isinstance(loaded, HierarchicalDecision):
-            decision = loaded
-            print(f"tuning table: {args.tuning_table} "
-                  f"(hierarchical, levels={loaded.names()})")
-        else:
-            decision = TableDecision(loaded.as_fn())
-            if loaded.meta:
-                print(f"tuning table: {args.tuning_table} "
-                      f"(tuner={loaded.meta.tuner}, "
-                      f"backend={loaded.meta.backend})")
+        # the launch's single Communicator: probe -> select -> decide ->
+        # dispatch (serving only dispatches with --tensor-parallel, but
+        # the plan below is resolved through the same object)
+        comm = Communicator.create(artifact=args.tuning_table,
+                                   probe=args.probe_fabric)
+        print(f"tuning table: {args.tuning_table} ({comm.describe()})")
         # decode-time collectives: per-token TP all-reduce of the residual
         # (B, d) and all-gather of vocab-parallel logits (B, V/p)
         p = args.tensor_parallel or max(jax.device_count(), 2)
-        for op, nbytes, spec in tp_decode_plan(
-                decision, args.batch, cfg.d_model, cfg.vocab_size, p):
-            print(f"  decode plan p={p} {op:12s} {nbytes:>9d} B -> "
-                  f"{spec.algorithm} segments={spec.segments}")
+        print(f"  decode plan p={p}")
+        print(tp_decode_plan(comm, args.batch, cfg.d_model,
+                             cfg.vocab_size, p).render(indent="    "))
     api = build_model(cfg, window=args.window,
                       attn_impl="xla" if jax.default_backend() != "tpu"
                       else "auto")
@@ -88,10 +88,10 @@ def main():
                                       (B, args.prompt_len)), jnp.int32)
 
     if args.tensor_parallel >= 2:
-        if decision is None:
+        if comm is None:
             raise SystemExit("--tensor-parallel needs --tuning-table")
         from repro import compat
-        from repro.launch.tp_decode import build_tp_decode_step
+        from repro.launch.tp_decode import build_tp_decode_step, executed_spec
         tp = args.tensor_parallel
         if jax.device_count() < tp:
             raise SystemExit(f"{tp}-way tensor parallelism needs {tp} "
@@ -99,10 +99,9 @@ def main():
                              "XLA_FLAGS=--xla_force_host_platform_device_"
                              f"count={tp})")
         tp_mesh = compat.make_mesh((tp,), ("model",))
-        step = build_tp_decode_step(api, tp_mesh, decision,
+        step = build_tp_decode_step(api, tp_mesh, comm,
                                     collective=args.tp_collective)
-        from repro.launch.tp_decode import executed_spec
-        nbytes, spec = executed_spec(decision, args.tp_collective,
+        nbytes, spec = executed_spec(comm, args.tp_collective,
                                      args.batch, cfg.vocab_size, tp)
         print(f"tensor-parallel decode: p={tp} via tuned "
               f"{args.tp_collective} ({nbytes} B -> {spec.algorithm} "

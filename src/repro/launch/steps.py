@@ -4,6 +4,10 @@ collective path.
 ``build_step`` is the single entry the launcher, dry-run and tests share:
 it returns the jit-able function, example ShapeDtypeStructs and shardings
 for every argument — so ``.lower().compile()`` needs no real allocation.
+
+All tuned dispatch (gradient sync, the MoE all-to-all) flows through one
+`repro.comms.Communicator` — built here from the CollectiveConfig, or
+passed in by a launcher that already probed the fabric.
 """
 from __future__ import annotations
 
@@ -16,13 +20,13 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
+from repro.comms import Communicator
 from repro.configs.base import (
     CollectiveConfig,
     ModelConfig,
     ParallelConfig,
     ShapeConfig,
 )
-from repro.core.collectives import api as capi
 from repro.models.registry import build_model, train_batch_structs
 from repro.optim import AdamW, cosine_with_warmup
 from repro.parallel import sharding as sh
@@ -57,23 +61,6 @@ def serve_plan(cfg: ModelConfig, shape: ShapeConfig) -> ServePlan:
 
 
 # ---------------------------------------------------------------------------
-def _decision_source(coll: CollectiveConfig) -> capi.DecisionSource:
-    if coll.decision:
-        from repro.core.topology import HierarchicalDecision, load_decision
-        from repro.core.tuning.decision import DecisionTable
-        dec = coll.decision
-        if isinstance(dec, str):
-            dec = load_decision(dec)     # schema 2/3, flat or hierarchical
-        if isinstance(dec, HierarchicalDecision):
-            return dec
-        table = dec if isinstance(dec, DecisionTable) else None
-        if table is None:
-            raise TypeError(f"unsupported decision source: {type(dec)}")
-        return capi.TableDecision(table.as_fn())
-    return capi.StaticDecision(
-        capi.CollectiveSpec(coll.algorithm, max(1, coll.segment_bytes and 8)))
-
-
 def build_train_step(
     cfg: ModelConfig,
     shape: ShapeConfig,
@@ -85,14 +72,20 @@ def build_train_step(
     total_steps: int = 1000,
     warmup_steps: int = 100,
     accounting: bool = False,
+    communicator: Optional[Communicator] = None,
 ):
     """Returns (fn, args_structs, in_shardings, out_shardings, donate).
 
     ``accounting=True`` builds the cost-accounting variant: layer loops
     literally unrolled, un-chunked attention/loss — compile-only, used by the
-    dry-run to correct XLA's count-loop-bodies-once cost analysis."""
+    dry-run to correct XLA's count-loop-bodies-once cost analysis.
+
+    ``communicator`` is the launch's `Communicator` (one per process,
+    built by the launcher — possibly with a live-fabric probe); when None,
+    one is resolved from the CollectiveConfig."""
     sh.set_current_mesh(mesh)
     sh.set_seq_sharding(parallel.seq_shard_activations)
+    comm = communicator or Communicator.from_config(coll, mesh)
     ep_axis = "model" if (cfg.family == "moe"
                           and sh.model_size(mesh) > 1) else None
     api = build_model(
@@ -104,7 +97,7 @@ def build_train_step(
         ("xla" if jax.default_backend() != "tpu" else "auto"),
         unroll=accounting,
         loss_chunk=(1 << 30) if accounting else 512,
-        a2a_algorithm=coll.a2a_algorithm,
+        a2a_algorithm=comm,
     )
     opt = AdamW(lr=lr)
 
@@ -117,15 +110,12 @@ def build_train_step(
     ospecs = type(opt_s)(step=P(), mu=pspecs, nu=pspecs)
     bspecs = sh.batch_specs(batch_s, mesh, shape)
 
-    tuned = coll.algorithm != "xla" or coll.decision is not None
+    tuned = comm.is_tuned
     dpx = sh.dp_axes(mesh)
-    dsz = sh.dp_size(mesh)
 
     if tuned and parallel.shard_params_over_data:
         raise ValueError("tuned gradient sync requires non-FSDP params "
                          "(DESIGN.md §3); use algorithm='xla' with FSDP")
-
-    decision = _decision_source(coll)
 
     def lr_scale(step):
         return cosine_with_warmup(step, warmup_steps=warmup_steps,
@@ -178,43 +168,13 @@ def build_train_step(
             return new_params, new_opt, {"loss": loss, **aux}
     else:
         # partial-manual shard_map over the data axes: per-shard backward,
-        # tuned per-leaf gradient all-reduce (the paper's technique), local
-        # optimizer step on replicated params
-        from repro.core.collectives.hierarchical import (
-            sync_gradients_hierarchical,
-        )
-        from repro.core.topology import HierarchicalDecision
-        hierarchical = isinstance(decision, HierarchicalDecision) \
-            and "pod" in dpx
-        if hierarchical:
-            # address the artifact's levels by canonical name when it has
-            # them: a 3-level artifact's level 0 is intra_host (the
-            # model-parallel tier), not the data axis's intra_pod
-            names = decision.names()
-            inner_level = "intra_pod" if "intra_pod" in names else 0
-            outer_level = "cross_pod" if "cross_pod" in names else -1
-
+        # tuned per-leaf gradient sync through the Communicator (which
+        # picks flat, psum-topped, or the full per-level hierarchical
+        # composition), local optimizer step on replicated params
         def fn(params, opt_state, batch):
             def inner(params, opt_state, batch):
                 (loss, aux), grads = grad_fn(params, batch)
-                if hierarchical:
-                    # full topology-aware schedule: reduce-scatter inside
-                    # the pod, all-reduce across pods on the 1/p shard,
-                    # all-gather inside — each phase tuned per level
-                    grads = sync_gradients_hierarchical(
-                        grads, "data", mesh.shape["data"],
-                        "pod", mesh.shape["pod"], decision, mean=False,
-                        inner_level=inner_level, outer_level=outer_level)
-                else:
-                    # tuned algorithms run within the pod ("data" ring);
-                    # the cross-pod hop is a plain psum on top
-                    grads = capi.sync_gradients(grads, "data",
-                                                mesh.shape["data"],
-                                                decision, mean=False)
-                    if "pod" in dpx:
-                        grads = jax.tree.map(
-                            lambda g: jax.lax.psum(g, "pod"), grads)
-                grads = jax.tree.map(lambda g: g / dsz, grads)
+                grads = comm.sync_gradients(grads, mean=True)
                 loss = jax.lax.pmean(loss, dpx)
                 aux = jax.tree.map(lambda v: jax.lax.pmean(v, dpx), aux)
                 new_params, new_opt = opt.update(
@@ -243,17 +203,19 @@ def build_train_step(
 
 def build_prefill_step(cfg: ModelConfig, shape: ShapeConfig,
                        parallel: ParallelConfig, coll: CollectiveConfig,
-                       mesh, *, accounting: bool = False):
+                       mesh, *, accounting: bool = False,
+                       communicator: Optional[Communicator] = None):
     """Forward pass producing logits over the prompt (inference-prefill)."""
     sh.set_current_mesh(mesh)
     sh.set_seq_sharding(parallel.seq_shard_activations)
+    comm = communicator or Communicator.from_config(coll, mesh)
     ep_axis = "model" if (cfg.family == "moe"
                           and sh.model_size(mesh) > 1) else None
     ai = "ref" if accounting else \
         ("xla" if jax.default_backend() != "tpu" else "auto")
     api = build_model(
         cfg, ep_axis=ep_axis, mesh=mesh, param_dtype=jnp.bfloat16,
-        attn_impl=ai, unroll=accounting, a2a_algorithm=coll.a2a_algorithm)
+        attn_impl=ai, unroll=accounting, a2a_algorithm=comm)
 
     key = jax.random.PRNGKey(0)
     params_s = jax.eval_shape(api.init, key)
@@ -285,7 +247,7 @@ def build_prefill_step(cfg: ModelConfig, shape: ShapeConfig,
             h, _ = moe_model.forward(params, x, cfg, ep_axis=ep_axis,
                                      mesh=mesh, attn_impl=ai,
                                      unroll=accounting,
-                                     a2a_algorithm=coll.a2a_algorithm)
+                                     a2a_algorithm=comm)
             return T.logits_fn(params, h, cfg)[:, -1]
         if cfg.family == "ssm":
             from repro.models import ssm

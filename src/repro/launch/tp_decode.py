@@ -1,10 +1,12 @@
-"""Tensor-parallel decode through tuned collectives.
+"""Tensor-parallel decode through the tuned `Communicator`.
 
 The decode hot loop's collectives are the per-token all-gather of
 vocab-parallel logits and the all-reduce of partial logits — this module
-routes BOTH through a ``DecisionSource`` (a tuned ``TableDecision`` or a
-``HierarchicalDecision``), so the serving launcher consumes the artifact
-instead of only printing the plan.
+routes BOTH through a `repro.comms.Communicator`, so the serving launcher
+consumes the artifact instead of only printing the plan. The requests the
+step executes and the requests `Communicator.explain` renders are built by
+the SAME functions below, so the reported plan is exactly the executed
+plan.
 
 Numerics are exact by construction, so tuned decode is bit-identical to
 the untuned path (asserted in tests/test_decode_consistency.py):
@@ -22,18 +24,67 @@ schedule, which is what the decision artifact tunes.
 """
 from __future__ import annotations
 
+from typing import List
+
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
-from repro.core.collectives.api import DecisionSource, apply_collective
+from repro.comms import CollectiveRequest, Communicator, PlanReport
+from repro.core.collectives.dispatch import apply_collective
 
 TP_COLLECTIVES = ("all_gather", "all_reduce")
 
 
-def build_tp_decode_step(api, mesh, decision: DecisionSource, *,
-                         collective: str = "all_gather", axis: str = "model"):
+def logits_request(collective: str, batch: int, vocab: int, p: int,
+                   *, axis: str = "model", itemsize: int = 2,
+                   dtype: str = "bfloat16") -> CollectiveRequest:
+    """The decode loop's logits-assembly request: the V/p shard for
+    all_gather, the full (Megatron-padded) buffer for all_reduce — the
+    exact lookup ``build_tp_decode_step`` performs per token."""
+    from repro.models.layers import pad_vocab
+    nbytes = batch * pad_vocab(vocab) * itemsize
+    if collective == "all_gather":
+        nbytes //= p
+    return CollectiveRequest(collective, nbytes, axis=axis, axis_size=p,
+                             dtype=dtype)
+
+
+def decode_requests(batch: int, d_model: int, vocab: int, p: int,
+                    *, axis: str = "model", itemsize: int = 2
+                    ) -> List[CollectiveRequest]:
+    """All decode-time collective requests of a TP model: the per-layer
+    residual all-reduce and the vocab-parallel logits all-gather."""
+    return [
+        CollectiveRequest("all_reduce", batch * d_model * itemsize,
+                          axis=axis, axis_size=p, dtype="bfloat16"),
+        logits_request("all_gather", batch, vocab, p, axis=axis,
+                       itemsize=itemsize),
+    ]
+
+
+def tp_decode_plan(comm: Communicator, batch: int, d_model: int,
+                   vocab: int, p: int, itemsize: int = 2) -> PlanReport:
+    """The decode-time collective plan the serving launcher reports before
+    entering the loop — rendered by `Communicator.explain` over the same
+    requests the step functions build."""
+    return comm.explain(decode_requests(batch, d_model, vocab, p,
+                                        itemsize=itemsize))
+
+
+def executed_spec(comm: Communicator, collective: str, batch: int,
+                  vocab: int, p: int, itemsize: int = 2):
+    """(nbytes, spec) of the logits collective ``build_tp_decode_step``
+    will actually run — same request builder as the step function, so the
+    launcher reports exactly what executes."""
+    req = logits_request(collective, batch, vocab, p, itemsize=itemsize)
+    return req.nbytes, comm.spec(req)
+
+
+def build_tp_decode_step(api, mesh, comm: Communicator, *,
+                         collective: str = "all_gather",
+                         axis: str = "model"):
     """A jit-able ``step(params, cache, tokens) -> (logits, cache)`` whose
     per-token logits assembly runs the tuned collective over ``axis``."""
     assert collective in TP_COLLECTIVES, collective
@@ -46,11 +97,11 @@ def build_tp_decode_step(api, mesh, decision: DecisionSource, *,
         shard = V // p
         r = jax.lax.axis_index(axis)
         # the wire message: the V/p shard for all_gather, the full masked
-        # logits buffer for all_reduce
-        nbytes = logits.size * logits.dtype.itemsize
-        if collective == "all_gather":
-            nbytes //= p
-        spec = decision.spec_for(collective, nbytes, p)
+        # logits buffer for all_reduce — the same request explain() renders
+        req = logits_request(collective, logits.shape[0], V, p, axis=axis,
+                             itemsize=logits.dtype.itemsize,
+                             dtype=str(logits.dtype))
+        spec = comm.spec(req)
         if collective == "all_gather":
             # vocab-parallel: own columns, transposed so the gather's
             # leading-axis concatenation lands in rank order
@@ -74,31 +125,3 @@ def build_tp_decode_step(api, mesh, decision: DecisionSource, *,
         out_specs=(P(), P()),
         check_vma=False)
     return jax.jit(shard_mapped)
-
-
-def tp_decode_plan(decision: DecisionSource, batch: int, d_model: int,
-                   vocab: int, p: int, itemsize: int = 2):
-    """The (op, nbytes) -> spec plan for a TP model's decode-time messages
-    (per-layer residual all-reduce, vocab-parallel logits all-gather) —
-    what the serving launcher reports before entering the loop."""
-    from repro.models.layers import pad_vocab
-    rows = []
-    for op, nbytes in (("all_reduce", batch * d_model * itemsize),
-                       ("all_gather",
-                        batch * pad_vocab(vocab) * itemsize // p)):
-        spec = decision.spec_for(op, nbytes, p)
-        rows.append((op, nbytes, spec))
-    return rows
-
-
-def executed_spec(decision: DecisionSource, collective: str, batch: int,
-                  vocab: int, p: int, itemsize: int = 2):
-    """(nbytes, spec) of the logits collective ``build_tp_decode_step``
-    will actually run — same lookup as the step function (including the
-    Megatron-style vocab padding the logits head applies), so the launcher
-    reports exactly what executes."""
-    from repro.models.layers import pad_vocab
-    nbytes = batch * pad_vocab(vocab) * itemsize
-    if collective == "all_gather":
-        nbytes //= p
-    return nbytes, decision.spec_for(collective, nbytes, p)

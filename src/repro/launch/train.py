@@ -48,6 +48,13 @@ def main():
                          "{algorithm, segments} per message size")
     ap.add_argument("--decision", default=None,
                     help="deprecated alias for --tuning-table")
+    ap.add_argument("--probe-fabric", action="store_true",
+                    help="probe the live fabric before selecting a table "
+                         "from a multi-backend artifact (instead of "
+                         "first-table-wins)")
+    ap.add_argument("--explain", action="store_true",
+                    help="print the per-leaf gradient-sync collective plan "
+                         "(algorithm/segments/level) before training")
     ap.add_argument("--topology", default=None,
                     help="network hierarchy: a 'PODSxDATA' spec (e.g. 2x4) "
                          "or a Topology JSON path. Splits the data axis "
@@ -104,22 +111,20 @@ def main():
         mesh = make_local_mesh(model_parallel=args.model_parallel)
     parallel = ParallelConfig()
     table_path = args.tuning_table or args.decision
-    table = None
+    # the launch's single Communicator: probe -> select -> decide -> dispatch
+    from repro.comms import Communicator
+    comm = Communicator.create(
+        mesh, topology=topology, artifact=table_path,
+        probe=args.probe_fabric, algorithm=args.collective)
     if table_path:
-        from repro.core.topology import HierarchicalDecision, load_decision
-        table = load_decision(table_path)   # validate once, reuse below
-        if isinstance(table, HierarchicalDecision):
-            print(f"tuning table: {table_path} "
-                  f"(hierarchical, levels={table.names()})")
-        elif table.meta:
-            print(f"tuning table: {table_path} (tuner={table.meta.tuner} "
-                  f"n_experiments={table.meta.n_experiments} "
-                  f"penalty={table.meta.penalty})")
-    coll = CollectiveConfig(algorithm=args.collective, decision=table)
+        print(f"tuning table: {table_path} ({comm.describe()})")
+    elif args.probe_fabric:
+        print(f"probed fabric: {comm.probed}")
+    coll = CollectiveConfig(algorithm=args.collective, decision=table_path)
 
     fn, _, in_sh, out_sh, donate = build_train_step(
         cfg, shape, parallel, coll, mesh, lr=args.lr,
-        total_steps=args.steps)
+        total_steps=args.steps, communicator=comm)
     step_fn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
                       donate_argnums=donate)
 
@@ -132,6 +137,9 @@ def main():
     coll_desc = f"table:{table_path}" if table_path else args.collective
     print(f"arch={cfg.name} devices={jax.device_count()} "
           f"mesh={dict(mesh.shape)} collective={coll_desc}")
+    if args.explain:
+        print("gradient-sync plan (per leaf):")
+        print(comm.explain_gradients(params).render())
     t_start = time.time()
     for i in range(args.steps):
         batch = jax.device_put(

@@ -112,9 +112,16 @@ def _expert_ffn(xg, wg, wu, wd, compute_dtype):
 def _exchange(buf, ep_axis, tp, direction, algorithm="xla"):
     """All-to-all on the dispatch buffer, with the survey's algorithm choice.
 
+    ``algorithm`` is an algorithm name or a `repro.comms.Communicator`,
+    which resolves the name per (message bytes, fan-out) — the tuned MoE
+    dispatch path.
+
     forward:  (E, C, d) -> (E/tp, tp*C, d)   (tokens to their experts)
     reverse:  (E/tp, tp*C, d) -> (E, C, d)   (expert outputs back home)
     """
+    if not isinstance(algorithm, str):       # a Communicator
+        algorithm = algorithm.a2a_algorithm_for(
+            buf.size * buf.dtype.itemsize, ep_axis, tp)
     if algorithm == "xla":
         if direction == "fwd":
             return jax.lax.all_to_all(buf, ep_axis, split_axis=0,
@@ -145,7 +152,7 @@ def moe_block(
     cfg: ModelConfig,
     *,
     ep_axis: Optional[str] = None,
-    a2a_algorithm: str = "xla",
+    a2a_algorithm="xla",          # name or repro.comms.Communicator
     compute_dtype=jnp.bfloat16,
 ):
     """Returns (out (B,S,d), aux dict)."""

@@ -78,8 +78,8 @@ def _layer(x, lp, cfg, positions, *, window, kv, ep_axis, mesh,
 
 def forward(params, embeds, cfg: ModelConfig, *, window=0, ep_axis=None,
             mesh=None, compute_dtype=jnp.bfloat16, attn_impl="auto",
-            a2a_algorithm: str = "xla", remat: bool = False,
-            unroll: bool = False):
+            a2a_algorithm="xla",  # name or repro.comms.Communicator
+            remat: bool = False, unroll: bool = False):
     S = embeds.shape[1]
     positions = jnp.arange(S)
 

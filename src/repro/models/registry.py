@@ -45,7 +45,7 @@ def build_model(
     remat: bool = False,
     unroll: bool = False,
     loss_chunk: int = 512,
-    a2a_algorithm: str = "xla",
+    a2a_algorithm="xla",  # algorithm name or a repro.comms.Communicator
 ) -> ModelAPI:
     mod = _FAMILY[cfg.family]
     fkw: dict = {"compute_dtype": compute_dtype, "remat": remat,

@@ -11,7 +11,7 @@ from jax.sharding import PartitionSpec as P
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
 from repro import compat
-from repro.core.collectives.api import CollectiveSpec, StaticDecision
+from repro.core.collectives.dispatch import CollectiveSpec, StaticDecision
 from repro.core.collectives.hierarchical import (
     hierarchical_all_reduce,
     sync_gradients_hierarchical,

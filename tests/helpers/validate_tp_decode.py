@@ -11,8 +11,9 @@ import jax, jax.numpy as jnp
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
 from repro import compat
+from repro.comms import Communicator
 from repro.configs import get_config
-from repro.core.collectives.api import CollectiveSpec, StaticDecision
+from repro.core.collectives.dispatch import CollectiveSpec
 from repro.launch.tp_decode import build_tp_decode_step
 from repro.models.registry import build_model
 
@@ -48,8 +49,8 @@ CASES = [("all_gather", "xla"), ("all_gather", "ring"),
          ("all_reduce", "recursive_doubling"),
          ("all_reduce", "rabenseifner")]
 for collective, algo in CASES:
-    dec = StaticDecision(CollectiveSpec(algo, 1))
-    step = build_tp_decode_step(api, mesh, dec, collective=collective)
+    comm = Communicator.create(mesh, static=CollectiveSpec(algo, 1))
+    step = build_tp_decode_step(api, mesh, comm, collective=collective)
     got = decode(step, f"{collective}/{algo}")
     identical = (got == ref).all()
     print(("OK  " if identical else "FAIL"),

@@ -181,8 +181,9 @@ def test_tp_decode_single_device_wiring():
     step (gather of the only shard / sum of one partial), so the wiring
     itself cannot perturb logits."""
     from repro import compat
+    from repro.comms import Communicator
     from repro.configs import get_config
-    from repro.core.collectives.api import CollectiveSpec, StaticDecision
+    from repro.core.collectives.dispatch import CollectiveSpec
     from repro.launch.tp_decode import build_tp_decode_step
     from repro.models.registry import build_model
 
@@ -196,7 +197,8 @@ def test_tp_decode_single_device_wiring():
     plain = jax.jit(api.decode_step)
     for collective in ("all_gather", "all_reduce"):
         step = build_tp_decode_step(
-            api, mesh, StaticDecision(CollectiveSpec("ring", 1)),
+            api, mesh, Communicator.create(
+                mesh, static=CollectiveSpec("ring", 1)),
             collective=collective)
         cache_a = api.init_cache(B, S)
         cache_b = api.init_cache(B, S)

@@ -64,6 +64,39 @@ def test_serve_cli_tp_tuned_2dev():
     assert "tok/s" in r.stdout
 
 
+def test_train_cli_probe_fabric_selects_profile_2dev(tmp_path):
+    """--probe-fabric times the live fabric and selects the matching table
+    out of a multi-backend schema-3 artifact, instead of first-table-wins
+    (the first profile here is an absurd fabric no real probe can fit)."""
+    import sys as _sys
+    _sys.path.insert(0, SRC)
+    from repro.core.topology.decision import MultiProfileArtifact
+    from repro.core.tuning.decision import DecisionTable, TableMeta
+    from repro.core.tuning.space import Method
+
+    absurd = dict(launch=1e3, byte_time=1e3, small_gap_factor=1.0,
+                  small_knee=1024.0, gamma=0.0, incast_factor=0.0)
+    plausible = dict(launch=1e-5, byte_time=1e-9, small_gap_factor=1.0,
+                     small_knee=1024.0, gamma=0.0, incast_factor=0.0)
+    art = MultiProfileArtifact([
+        ("absurd", DecisionTable(
+            {("all_reduce", 2, 1024): Method("recursive_doubling", 1)},
+            meta=TableMeta(tuner="exhaustive", profile=absurd))),
+        ("plausible", DecisionTable(
+            {("all_reduce", 2, 1024): Method("ring", 1)},
+            meta=TableMeta(tuner="exhaustive", profile=plausible))),
+    ])
+    path = str(tmp_path / "multi.json")
+    art.save(path)
+    r = _run(["repro.launch.train", "--arch", "smollm-135m", "--reduced",
+              "--steps", "2", "--seq", "64", "--batch", "2",
+              "--tuning-table", path, "--probe-fabric"],
+             xla_devices=2)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "profile=plausible [probed]" in r.stdout
+    assert "step    1" in r.stdout
+
+
 def test_train_cli_hierarchical_topology_8dev(tmp_path):
     """--topology + a schema-3 artifact routes gradient sync through the
     per-level reduce-scatter / all-reduce / all-gather composition."""
