@@ -14,10 +14,15 @@ expected all-reduce time of
                  (what this subsystem ships),
 
 with each row's penalty vs the machine optimum (best of any flat schedule
-or hierarchical composition). Acceptance: mean tuned-hier penalty <= mean
-tuned-flat penalty.
+or hierarchical composition). Each pod count is swept on BOTH the 2-level
+(pod/DCN) topology and the full 3-level host/pod/DCN stack — the 3-level
+column shows the per-level composition keeps winning when the intra-host
+tier joins the hierarchy. Acceptance: mean tuned-hier penalty <= mean
+tuned-flat penalty, on 2-level and 3-level topologies alike.
 
-CSV rows: ``hierarchy_vs_flat/<pods>x<inner>/<m>/<strategy>, us, penalty``.
+CSV rows: ``hierarchy_vs_flat/<spec>/<m>/<strategy>, us, penalty`` where
+``<spec>`` is the topology outermost-first (``2x8`` = 2 pods of 8;
+``2x4x2`` = 2 pods of 4 hosts of 2).
 """
 from __future__ import annotations
 
@@ -66,8 +71,7 @@ def tuned_flat_decision(topology, ms):
     return TuningSession.best(reports).table
 
 
-def sweep(pods: int, ms=MESSAGE_SIZES):
-    topo = Topology.two_level(INNER, pods)
+def sweep(topo: Topology, label: str, ms=MESSAGE_SIZES):
     hier, _ = tune_topology(topo, ms=ms, tuners=TUNERS)
     flat_table = tuned_flat_decision(topo, ms)
 
@@ -83,25 +87,43 @@ def sweep(pods: int, ms=MESSAGE_SIZES):
                         ("tuned-hier", t_hier)):
             pen = (t - opt) / opt
             penalties[name].append(pen)
-            row(f"hierarchy_vs_flat/{pods}x{INNER}/{m}/{name}",
+            row(f"hierarchy_vs_flat/{label}/{m}/{name}",
                 t * 1e6, f"penalty={pen * 100:.1f}%")
     return penalties
 
 
+def topologies(pods: int):
+    """The 2-level pod/DCN topology and its 3-level host/pod/DCN
+    counterpart at the same total size (hosts of 2 inside each pod)."""
+    two = Topology.two_level(INNER, pods)
+    spec3 = f"{pods}x{INNER // 2}x2"            # outermost first
+    return ((two, f"{pods}x{INNER}"),
+            (Topology.from_spec(spec3), spec3))
+
+
 def run():
     means = {"xla": [], "tuned-flat": [], "tuned-hier": []}
+    means3 = {"xla": [], "tuned-flat": [], "tuned-hier": []}
     for pods in POD_COUNTS:
-        pens = sweep(pods)
-        for k, v in pens.items():
-            means[k].extend(v)
-    for k, v in means.items():
-        row(f"hierarchy_vs_flat/mean/{k}", 0.0,
-            f"mean_penalty={sum(v) / len(v) * 100:.1f}%")
-    mh = sum(means["tuned-hier"]) / len(means["tuned-hier"])
-    mf = sum(means["tuned-flat"]) / len(means["tuned-flat"])
-    assert mh <= mf, (
-        f"tuned-hierarchical mean penalty {mh:.3f} worse than tuned-flat "
-        f"{mf:.3f}")
+        for n_levels, (topo, label) in enumerate(topologies(pods)):
+            pens = sweep(topo, label)
+            dest = means3 if n_levels else means
+            for k, v in pens.items():
+                dest[k].extend(v)
+    for tag, dest in (("mean", means), ("mean-3level", means3)):
+        for k, v in dest.items():
+            row(f"hierarchy_vs_flat/{tag}/{k}", 0.0,
+                f"mean_penalty={sum(v) / len(v) * 100:.1f}%")
+    for tag, dest in (("2-level", means), ("3-level", means3)):
+        mh = sum(dest["tuned-hier"]) / len(dest["tuned-hier"])
+        mf = sum(dest["tuned-flat"]) / len(dest["tuned-flat"])
+        assert mh <= mf, (
+            f"{tag} tuned-hierarchical mean penalty {mh:.3f} worse than "
+            f"tuned-flat {mf:.3f}")
+    mh = sum((means["tuned-hier"] + means3["tuned-hier"])) / (
+        len(means["tuned-hier"]) + len(means3["tuned-hier"]))
+    mf = sum((means["tuned-flat"] + means3["tuned-flat"])) / (
+        len(means["tuned-flat"]) + len(means3["tuned-flat"]))
     return mh, mf
 
 

@@ -103,11 +103,33 @@ if __name__ == "__main__":
           "(schema 3; use: python -m repro.launch.train --topology 2x4 "
           "--tuning-table hierarchical_decision.json)")
 
+    # the full host/pod/DCN stack: one table per tier, three named tables
+    # in one schema-3 artifact, consumed by the 3-level gradient sync
+    print("\n== per-level tuning on the 3-tier 2x2x2 "
+          "(DCN x pods x hosts) topology ==")
+    topo3 = Topology.from_spec("2x2x2")
+    hier3, level_reports3 = tune_topology(topo3, ms=MS)
+    for name, reps in level_reports3.items():
+        best = TuningSession.best(reps)
+        print(f"  {name:10s} tuner={best.name:12s} "
+              f"experiments={best.n_experiments}")
+    t_hier3 = hierarchical_allreduce_time(
+        topo3, decided_hierarchical_methods(hier3, topo3, m), m)
+    t_xla3 = flat_time(topo3, "all_reduce", Method("xla", 1), m)
+    print(f"  {m >> 20} MB all-reduce: 3-level hierarchical "
+          f"{t_hier3 * 1e6:.0f} us vs flat XLA {t_xla3 * 1e6:.0f} us "
+          f"({t_xla3 / t_hier3:.1f}x)")
+    hier3.save("hierarchical_decision_3level.json")
+    print("3-level artifact -> hierarchical_decision_3level.json "
+          "(use: python -m repro.launch.train --topology 2x2x2 "
+          "--tuning-table hierarchical_decision_3level.json --explain)")
+
     # -- consumption: one Communicator owns probe -> select -> decide -------
     from repro.comms import CollectiveRequest, Communicator
 
     print("\n== Communicator: the single tuned-dispatch entry point ==")
-    for art in ("tuned_decision.json", "hierarchical_decision.json"):
+    for art in ("tuned_decision.json", "hierarchical_decision.json",
+                "hierarchical_decision_3level.json"):
         comm = Communicator.create(artifact=art)
         print(f"{art}: {comm.describe()}")
         # explain() renders exactly the {algorithm, segments, level} the

@@ -6,6 +6,10 @@ MoE all-to-all, benchmarks) dispatches through its op methods and can ask
 `explain()` why any schedule was chosen.
 """
 from repro.comms.communicator import Communicator
-from repro.comms.probe import probe_live_profile
+from repro.comms.probe import (
+    level_probe_pairs,
+    probe_live_profile,
+    probe_mesh_topology,
+)
 from repro.comms.report import PlanEntry, PlanReport
 from repro.comms.request import CollectiveRequest

@@ -13,8 +13,8 @@ call sites used to re-assemble by hand:
      survey's richer feature vector), degrading to the legacy
      (op, nbytes, axis_size) 3-tuple for existing schema-2/3 artifacts;
   4. **dispatch** — execute the chosen {algorithm, segments} through the
-     shard_map algorithm registry, flat or as a two-axis hierarchical
-     composition (HiCCL-style).
+     shard_map algorithm registry, flat or as an N-level hierarchical
+     composition over the mesh's sync tiers (HiCCL / MagPIe-style).
 
 Every decision is explainable: `explain(requests)` resolves through
 EXACTLY the lookup path the executing ops use and returns a `PlanReport`
@@ -30,14 +30,19 @@ import numpy as np
 
 from repro.comms.report import PlanEntry, PlanReport
 from repro.comms.request import CollectiveRequest
+from repro.core.analytical.hierarchy import padded_allreduce_schedule
 from repro.core.collectives.algorithms import ALGORITHMS
 from repro.core.collectives.dispatch import CollectiveSpec, apply_collective
 from repro.core.collectives.hierarchical import (
-    hierarchical_all_gather,
-    hierarchical_all_reduce,
-    hierarchical_reduce_scatter,
-    sync_gradients_hierarchical,
+    multilevel_all_gather,
+    multilevel_all_reduce,
+    multilevel_reduce_scatter,
+    sync_gradients_multilevel,
 )
+#: gradient-sync mesh axes, innermost tier first — a mesh carrying any of
+#: these is data-parallel over them ("data" inside the host/pod, "pod"
+#: across pods, "dcn" across the WAN-class links)
+from repro.core.topology.model import SYNC_AXES
 
 _XLA_SPEC = CollectiveSpec("xla", 1)
 
@@ -137,7 +142,7 @@ class _TablePolicy:
 #: which topology level carries each mesh axis's collectives, for
 #: artifacts whose levels use the canonical names
 _AXIS_LEVEL = {"model": "intra_host", "data": "intra_pod",
-               "pod": "cross_pod"}
+               "pod": "cross_pod", "dcn": "cross_pod"}
 
 
 class _HierPolicy:
@@ -153,12 +158,6 @@ class _HierPolicy:
     def __init__(self, hier, topology=None):
         self.hier = hier
         self.topology = topology
-        names = hier.names()
-        # gradient-composition defaults, by canonical name when present
-        self.inner_level: Union[int, str] = \
-            "intra_pod" if "intra_pod" in names else 0
-        self.outer_level: Union[int, str] = \
-            "cross_pod" if "cross_pod" in names else -1
 
     def _level_name(self, level) -> str:
         names = self.hier.names()
@@ -178,6 +177,40 @@ class _HierPolicy:
             if mapped in names:
                 return mapped
         return 0
+
+    def level_keys(self, axes: Sequence[str]) -> List[Union[int, str]]:
+        """Which artifact level answers each composition axis (innermost
+        first). An attached `Topology` maps axes to levels exactly; a
+        full-stack composition — the innermost-first sync tiers, as many
+        axes as the artifact has levels (gradient sync by construction) —
+        maps positionally; otherwise the canonical axis names decide,
+        falling back to position with the composition's outermost axis
+        pinned to the artifact's outermost level."""
+        names = self.hier.names()
+        full_stack = len(names) == len(axes) \
+            and tuple(axes) == SYNC_AXES[:len(axes)]
+        out: List[Union[int, str]] = []
+        for i, ax in enumerate(axes):
+            level: Optional[Union[int, str]] = None
+            if self.topology is not None:
+                for lv in self.topology.levels:
+                    if lv.axis == ax and lv.name in names:
+                        level = lv.name
+                        break
+            if level is None and full_stack:
+                level = i
+            if level is None:
+                mapped = _AXIS_LEVEL.get(ax)
+                if mapped in names:
+                    level = mapped
+                elif i == len(axes) - 1:
+                    # a partial composition's outermost phase belongs on
+                    # the machine-spanning table, wherever it sits
+                    level = len(names) - 1
+                else:
+                    level = min(i, len(names) - 1)
+            out.append(level)
+        return out
 
     def resolve(self, req: CollectiveRequest) -> PlanEntry:
         level = self._level_for(req)
@@ -206,17 +239,21 @@ class Communicator:
     """
 
     def __init__(self, mesh=None, *, policy=None, topology=None,
-                 probed=None, a2a_algorithm: str = "xla",
+                 probed=None, probed_topology=None,
+                 a2a_algorithm: str = "xla",
                  artifact_path: Optional[str] = None):
         self.mesh = mesh
         self.topology = topology
         self.probed = probed
+        self.probed_topology = probed_topology
         self._policy = policy or _XlaPolicy()
         self._a2a = a2a_algorithm or "xla"
         self.artifact_path = artifact_path
         axes = set(mesh.axis_names) if mesh is not None else set()
+        #: gradient-sync axes present on the mesh, innermost tier first
+        self._sync_axes: Tuple[str, ...] = tuple(
+            a for a in SYNC_AXES if a in axes)
         self._inner_axis = "data" if "data" in axes else None
-        self._outer_axis = "pod" if "pod" in axes else None
 
     # -- construction -------------------------------------------------------
     @classmethod
@@ -231,7 +268,15 @@ class Communicator:
                       MultiProfileArtifact;
         probe         probe the live fabric and select the matching table
                       from a multi-backend artifact (``probed`` injects a
-                      pre-measured NetworkProfile instead, e.g. in tests);
+                      pre-measured NetworkProfile instead, e.g. in tests).
+                      On a multi-level mesh the probe times one
+                      representative device pair PER LEVEL (intra-host /
+                      intra-pod / cross-pod) and synthesizes a full
+                      ``Topology`` (kept as ``probed_topology``, and used
+                      as the level map when no explicit ``topology`` is
+                      given); table selection matches against the
+                      innermost level's profile — the fabric the old
+                      2-device probe measured;
         static        a fixed CollectiveSpec for every request;
         algorithm / segment_bytes
                       config-style static policy: fixed algorithm, segment
@@ -243,9 +288,20 @@ class Communicator:
         )
         from repro.core.tuning.decision import DecisionTable
 
+        probed_topology = None
         if probe and probed is None:
-            from repro.comms.probe import probe_live_profile
-            probed = probe_live_profile()
+            from repro.comms.probe import (
+                probe_live_profile,
+                probe_mesh_topology,
+            )
+            probed_topology = probe_mesh_topology(mesh) \
+                if mesh is not None else None
+            if probed_topology is not None:
+                probed = probed_topology.inner.profile
+                if topology is None:
+                    topology = probed_topology
+            else:
+                probed = probe_live_profile()
 
         path = None
         if isinstance(artifact, str):
@@ -286,6 +342,7 @@ class Communicator:
         else:
             policy = _XlaPolicy()
         return cls(mesh, policy=policy, topology=topology, probed=probed,
+                   probed_topology=probed_topology,
                    a2a_algorithm=a2a_algorithm, artifact_path=path)
 
     @classmethod
@@ -344,39 +401,51 @@ class Communicator:
         return self._policy.level_spec(level, op, nbytes, axis_size)
 
     # -- planning / explainability ------------------------------------------
-    def _axis_sizes(self, req: CollectiveRequest) -> Tuple[int, int]:
-        inner_axis, outer_axis = req.axis
-        if self.mesh is not None:
-            return self.mesh.shape[inner_axis], self.mesh.shape[outer_axis]
-        raise ValueError("two-axis request needs a mesh")
+    def _axis_sizes(self, axes: Sequence[str]) -> List[int]:
+        if self.mesh is None:
+            raise ValueError("multi-axis request needs a mesh")
+        return [self.mesh.shape[a] for a in axes]
+
+    def _level_keys(self, axes: Sequence[str]) -> List:
+        """The decision-level address each composition axis dispatches
+        against (innermost first); flat policies answer every level, so
+        positional indices suffice there."""
+        if self._policy.kind == "hier":
+            return self._policy.level_keys(axes)
+        return list(range(len(axes)))
 
     def _composition_entries(self, req: CollectiveRequest
                              ) -> List[PlanEntry]:
-        """A two-axis request's phases, with the exact byte counts the
-        hierarchical compositions look up: same element counts and
-        _flatten_pad padding as ``hierarchical_all_reduce`` /
-        ``hierarchical_reduce_scatter`` / ``hierarchical_all_gather``."""
-        di, do = self._axis_sizes(req)
+        """A multi-axis request's phases, with the exact byte counts the
+        N-level compositions look up: the all-reduce phases walk the same
+        ``padded_allreduce_schedule`` as ``multilevel_all_reduce``, and
+        the reduce-scatter / all-gather arms mirror
+        ``multilevel_reduce_scatter`` / ``multilevel_all_gather``."""
+        axes = list(req.axis)
+        sizes = self._axis_sizes(axes)
+        keys = self._level_keys(axes)
         itemsize = np.dtype(req.dtype).itemsize
         n = req.nbytes // itemsize
-        il, ol = self._hier_levels()
-        ia, oa = req.axis
 
         if req.op == "all_reduce":
-            padded = n + (-n) % di
-            shard = padded // di
-            phases = [("reduce_scatter", padded, ia, di, il),
-                      ("all_reduce", shard, oa, do, ol),
-                      ("all_gather", shard, ia, di, il)]
+            phases = [(op, in_elems, axes[lvl], sizes[lvl], keys[lvl])
+                      for lvl, op, in_elems, _ in
+                      padded_allreduce_schedule(sizes, n)]
         elif req.op == "reduce_scatter":
-            padded = n + (-n) % (di * do)
-            phases = [("reduce_scatter", padded, ia, di, il),
-                      ("reduce_scatter", padded // di, oa, do, ol)]
+            total = math.prod(sizes)
+            cur = n + (-n) % total
+            phases = []
+            for ax, p, key in zip(axes, sizes, keys):
+                phases.append(("reduce_scatter", cur, ax, p, key))
+                cur //= p
         elif req.op == "all_gather":
-            phases = [("all_gather", n, oa, do, ol),
-                      ("all_gather", n * do, ia, di, il)]
+            cur = n
+            phases = []
+            for ax, p, key in reversed(list(zip(axes, sizes, keys))):
+                phases.append(("all_gather", cur, ax, p, key))
+                cur *= p
         else:
-            raise ValueError(f"no two-axis composition for {req.op!r}")
+            raise ValueError(f"no multi-axis composition for {req.op!r}")
 
         return [self._level_entry(
             CollectiveRequest(op, elems * itemsize, axis=axis, axis_size=p,
@@ -409,12 +478,11 @@ class Communicator:
 
     def gradient_requests(self, tree) -> List[CollectiveRequest]:
         """One request per gradient leaf, shaped the way `sync_gradients`
-        will dispatch it (two-axis composition on a hierarchical multi-pod
-        communicator, flat otherwise)."""
+        will dispatch it (N-axis composition over every sync tier on a
+        hierarchical multi-level communicator, flat otherwise)."""
         out = []
-        hier = self.hierarchical and self._outer_axis is not None
-        axis = (self._inner_axis, self._outer_axis) if hier \
-            else self._inner_axis
+        hier = self.hierarchical and len(self._sync_axes) > 1
+        axis = tuple(self._sync_axes) if hier else self._inner_axis
         p = self._data_parallel_size() if hier else self._inner_size()
         for leaf in jax.tree.leaves(tree):
             nbytes = int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
@@ -424,17 +492,20 @@ class Communicator:
         return out
 
     def explain_gradients(self, tree) -> PlanReport:
-        """Per-leaf gradient-sync plan: the hierarchical composition's
-        phases, or the flat tuned all-reduce plus the cross-pod psum hop."""
+        """Per-leaf gradient-sync plan: the full composition's phases at
+        EVERY level of a hierarchical decision, or the flat tuned
+        all-reduce plus one psum hop per remaining sync tier."""
         entries: List[PlanEntry] = []
         for req in self.gradient_requests(tree):
             entries.extend(self.plan(req))
-            if not req.hierarchical and self._outer_axis is not None:
-                psum_req = CollectiveRequest(
-                    "all_reduce", req.nbytes, axis=self._outer_axis,
-                    axis_size=self.mesh.shape[self._outer_axis],
-                    dtype=req.dtype)
-                entries.append(PlanEntry(psum_req, _XLA_SPEC, source="psum"))
+            if not req.hierarchical:
+                for outer in self._sync_axes[1:]:
+                    psum_req = CollectiveRequest(
+                        "all_reduce", req.nbytes, axis=outer,
+                        axis_size=self.mesh.shape[outer],
+                        dtype=req.dtype)
+                    entries.append(PlanEntry(psum_req, _XLA_SPEC,
+                                             source="psum"))
         return PlanReport(entries)
 
     # -- dispatch -----------------------------------------------------------
@@ -442,10 +513,14 @@ class Communicator:
         return self.mesh.shape[self._inner_axis] if self._inner_axis else 1
 
     def _data_parallel_size(self) -> int:
-        n = self._inner_size()
-        if self._outer_axis:
-            n *= self.mesh.shape[self._outer_axis]
+        n = 1
+        for a in self._sync_axes:
+            n *= self.mesh.shape[a]
         return n
+
+    def _levels_for(self, axes: Sequence[str]
+                    ) -> List[Tuple[str, int]]:
+        return list(zip(axes, self._axis_sizes(axes)))
 
     def _axis_and_size(self, axis) -> Tuple[str, int]:
         if axis is None:
@@ -462,46 +537,36 @@ class Communicator:
         return apply_collective(op, x, axis, p, self.spec(req),
                                 reduce_op=reduce_op)
 
-    def _hier_levels(self) -> Tuple[Union[int, str], Union[int, str]]:
-        if self._policy.kind == "hier":
-            return self._policy.inner_level, self._policy.outer_level
-        return 0, -1
-
     def all_reduce(self, x, axis=None, *, reduce_op: str = "add"):
         """Tuned all-reduce of the local buffer (inside shard_map). A
-        two-axis ``axis=(inner, outer)`` runs the hierarchical
+        multi-axis ``axis=(inner, ..., outer)`` runs the N-level
         reduce-scatter / all-reduce / all-gather composition."""
         if isinstance(axis, tuple):
-            (ia, oa) = axis
-            il, ol = self._hier_levels()
-            return hierarchical_all_reduce(
-                x, ia, self.mesh.shape[ia], oa, self.mesh.shape[oa], self,
-                op=reduce_op, inner_level=il, outer_level=ol)
+            return multilevel_all_reduce(
+                x, self._levels_for(axis), self, op=reduce_op,
+                level_keys=self._level_keys(axis))
         return self._dispatch_flat("all_reduce", x, axis,
                                    reduce_op=reduce_op)
 
     def reduce_scatter(self, x, axis=None, *, reduce_op: str = "add"):
-        """Tuned reduce-scatter (this rank's 1/p shard). A two-axis
-        ``axis`` composes reduce-scatter over both levels."""
+        """Tuned reduce-scatter (this rank's 1/p shard). A multi-axis
+        ``axis`` composes reduce-scatter over every level, innermost
+        first."""
         if isinstance(axis, tuple):
-            (ia, oa) = axis
-            il, ol = self._hier_levels()
-            return hierarchical_reduce_scatter(
-                x, ia, self.mesh.shape[ia], oa, self.mesh.shape[oa], self,
-                op=reduce_op, inner_level=il, outer_level=ol)
+            return multilevel_reduce_scatter(
+                x, self._levels_for(axis), self, op=reduce_op,
+                level_keys=self._level_keys(axis))
         return self._dispatch_flat("reduce_scatter", x, axis,
                                    reduce_op=reduce_op)
 
     def all_gather(self, x, axis=None):
-        """Tuned all-gather (p-times-larger concatenation). A two-axis
-        ``axis`` composes all-gather outer-then-inner (the inverse of the
-        two-axis reduce-scatter)."""
+        """Tuned all-gather (p-times-larger concatenation). A multi-axis
+        ``axis`` composes all-gather outermost-first (the inverse of the
+        multi-axis reduce-scatter)."""
         if isinstance(axis, tuple):
-            (ia, oa) = axis
-            il, ol = self._hier_levels()
-            return hierarchical_all_gather(
-                x, ia, self.mesh.shape[ia], oa, self.mesh.shape[oa], self,
-                inner_level=il, outer_level=ol)
+            return multilevel_all_gather(
+                x, self._levels_for(axis), self,
+                level_keys=self._level_keys(axis))
         return self._dispatch_flat("all_gather", x, axis)
 
     def all_to_all(self, x, axis=None):
@@ -523,26 +588,24 @@ class Communicator:
     def sync_gradients(self, grads, *, mean: bool = True):
         """All-reduce every gradient leaf with its tuned algorithm,
         picking the schedule the communicator resolved to: the full
-        hierarchical composition on a multi-pod mesh with a hierarchical
-        artifact, otherwise the flat tuned sync with a plain psum across
-        pods on top. Must be called inside shard_map (manual over the
-        data axes)."""
+        N-level composition on a multi-tier mesh with a hierarchical
+        artifact, otherwise the flat tuned sync with a plain psum per
+        remaining tier on top. Must be called inside shard_map (manual
+        over the sync axes)."""
         if self._inner_axis is None:
             raise ValueError("sync_gradients needs a mesh with a 'data' "
                              "axis")
         denom = self._data_parallel_size()
-        inner, di = self._inner_axis, self._inner_size()
-        outer = self._outer_axis
+        inner = self._inner_axis
 
-        if self.hierarchical and outer is not None:
-            il, ol = self._hier_levels()
-            return sync_gradients_hierarchical(
-                grads, inner, di, outer, self.mesh.shape[outer], self,
-                mean=mean, inner_level=il, outer_level=ol)
+        if self.hierarchical and len(self._sync_axes) > 1:
+            return sync_gradients_multilevel(
+                grads, self._levels_for(self._sync_axes), self, mean=mean,
+                level_keys=self._level_keys(self._sync_axes))
 
         def sync_leaf(g):
             out = self._dispatch_flat("all_reduce", g, inner)
-            if outer is not None:
+            for outer in self._sync_axes[1:]:
                 out = jax.lax.psum(out, outer)
             if mean:
                 out = out / denom

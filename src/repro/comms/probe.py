@@ -1,4 +1,4 @@
-"""Live-fabric probing for artifact selection.
+"""Live-fabric probing: artifact selection and per-level topology synthesis.
 
 A multi-backend (schema-3 "multi_profile") artifact ships one
 `DecisionTable` per fabric it was tuned on. Selecting the right table at
@@ -9,11 +9,21 @@ real devices (a jitted shard_map'd ``ppermute`` round) and fits
 — the same relative-least-squares fit the offline tuning pipeline uses,
 so `MultiProfileArtifact.select`'s profile distance compares like with
 like.
+
+On a multi-level mesh one pair is not enough: the links an intra-host
+pair crosses say nothing about the DCN. ``level_probe_pairs`` reads the
+mesh's device coordinates and picks one REPRESENTATIVE pair per sync
+tier — two devices adjacent along the innermost data axis (intra-host),
+along "pod" (intra-pod), along "dcn" (cross-pod) — and
+``probe_mesh_topology`` times each pair and feeds the per-level measure
+functions straight into ``repro.core.topology.probe_topology``, so a
+launch with ``--probe-fabric`` synthesizes a full per-level `Topology`
+from the live fabric.
 """
 from __future__ import annotations
 
 import time
-from typing import Optional, Sequence
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -21,13 +31,20 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
-from repro.core.topology.model import PROBE_SIZES, fit_profile
+from repro.core.topology.model import (
+    PROBE_SIZES,
+    SYNC_AXES,
+    Topology,
+    fit_profile,
+    level_names_for,
+    probe_topology,
+)
 from repro.core.tuning.simulator import NetworkProfile
 
 _PROBE_AXIS = "probe"
 
 
-def _pingpong(ms: int):
+def _pingpong(ms: int, devices=None):
     """A jitted 2-rank exchange of an m-byte buffer (one ppermute round
     each way, so the measured wall time is 2 transfers + dispatch)."""
     n = max(1, ms // 4)                      # float32 elements
@@ -37,34 +54,107 @@ def _pingpong(ms: int):
         back = jax.lax.ppermute(fwd, _PROBE_AXIS, [(0, 1), (1, 0)])
         return back
 
+    if devices is None:
+        devices = jax.devices()[:2]
     mesh = compat.make_mesh((2,), (_PROBE_AXIS,),
-                            devices=np.array(jax.devices()[:2]))
+                            devices=np.asarray(devices))
     fn = jax.jit(compat.shard_map(inner, mesh=mesh, in_specs=P(),
                                   out_specs=P(), check_vma=False))
     x = jnp.zeros((n,), jnp.float32)
     return fn, x
 
 
+def _time_pair(dev_a, dev_b, m: int, trials: int = 3) -> float:
+    """Seconds one m-byte one-way transfer takes between two devices
+    (best of ``trials`` timed pingpong rounds, halved). Tests monkeypatch
+    this to drive the pair-selection logic with a fake fabric."""
+    fn, x = _pingpong(m, devices=(dev_a, dev_b))
+    jax.block_until_ready(fn(x))             # compile + warm
+    best = float("inf")
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(x))
+        best = min(best, time.perf_counter() - t0)
+    return best / 2.0                        # per one-way transfer
+
+
 def probe_live_profile(ms: Sequence[int] = PROBE_SIZES, *,
                        trials: int = 3,
-                       base: Optional[NetworkProfile] = None
-                       ) -> Optional[NetworkProfile]:
-    """Probe the live fabric between the first two visible devices.
+                       base: Optional[NetworkProfile] = None,
+                       devices=None) -> Optional[NetworkProfile]:
+    """Probe the live fabric between one device pair (the first two
+    visible devices by default).
 
     Returns the fitted `NetworkProfile`, or None when fewer than two
     devices are attached (nothing to probe — callers fall back to the
     artifact's first profile).
     """
-    if jax.device_count() < 2:
-        return None
-    ts = []
-    for m in ms:
-        fn, x = _pingpong(m)
-        jax.block_until_ready(fn(x))         # compile + warm
-        best = float("inf")
-        for _ in range(trials):
-            t0 = time.perf_counter()
-            jax.block_until_ready(fn(x))
-            best = min(best, time.perf_counter() - t0)
-        ts.append(best / 2.0)                # per one-way transfer
+    if devices is None:
+        if jax.device_count() < 2:
+            return None
+        devices = jax.devices()[:2]
+    ts = [_time_pair(devices[0], devices[1], m, trials) for m in ms]
     return fit_profile(list(ms), ts, base=base)
+
+
+# ---------------------------------------------------------------------------
+# per-level probing over a mesh's device coordinates
+# ---------------------------------------------------------------------------
+def level_probe_pairs(mesh) -> List[Tuple[str, str, int, Tuple]]:
+    """One representative device pair per sync tier of ``mesh``.
+
+    Reads the mesh's device-coordinate grid and returns innermost-first
+    ``(level_name, axis, axis_size, (dev_a, dev_b))`` — dev_a is the
+    origin device, dev_b its neighbour ALONG THAT AXIS ONLY, so the timed
+    link is exactly the tier's fabric: stepping the "data" coordinate
+    stays inside the host, stepping "pod" crosses the pod boundary,
+    stepping "dcn" crosses the DCN. Size-1 axes carry no link and are
+    skipped; a mesh without sync axes (or None) yields [].
+    """
+    if mesh is None:
+        return []
+    axes = [a for a in SYNC_AXES if a in mesh.axis_names]
+    devs = np.asarray(mesh.devices)
+    order = list(mesh.axis_names)
+    origin = (0,) * devs.ndim
+    present = [(a, devs.shape[order.index(a)]) for a in axes]
+    names = level_names_for(len([1 for _, s in present if s > 1]) or 1)
+    out: List[Tuple[str, str, int, Tuple]] = []
+    name_i = 0
+    for axis, size in present:
+        if size < 2:
+            continue
+        neighbour = list(origin)
+        neighbour[order.index(axis)] = 1
+        out.append((names[name_i], axis, size,
+                    (devs[origin], devs[tuple(neighbour)])))
+        name_i += 1
+    return out
+
+
+def probe_mesh_topology(mesh, ms: Sequence[int] = PROBE_SIZES, *,
+                        trials: int = 3,
+                        timer: Optional[Callable] = None
+                        ) -> Optional[Topology]:
+    """Probe every sync tier of ``mesh`` and synthesize a `Topology`.
+
+    For each tier, ``level_probe_pairs`` picks its representative device
+    pair and a per-level measure function times that pair; the measures
+    feed straight into ``repro.core.topology.probe_topology``, which fits
+    one `NetworkProfile` per level. The resulting levels carry their mesh
+    axis, so a `Communicator` can map composition phases onto artifact
+    levels exactly. ``timer(dev_a, dev_b, m) -> seconds`` replaces the
+    real pingpong (tests); returns None when no tier has a pair to time.
+    """
+    pairs = level_probe_pairs(mesh)
+    if not pairs:
+        return None
+    time_pair = timer if timer is not None else \
+        (lambda a, b, m: _time_pair(a, b, m, trials))
+
+    def make_measure(dev_a, dev_b):
+        return lambda m: time_pair(dev_a, dev_b, m)
+
+    levels = [(name, size, make_measure(a, b), axis)
+              for name, axis, size, (a, b) in pairs]
+    return probe_topology(levels, ms)

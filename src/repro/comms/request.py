@@ -26,10 +26,10 @@ class CollectiveRequest:
                "all_to_all", "broadcast", ...);
     nbytes     wire message size: the local buffer the algorithm moves
                (the shard for all_gather, the full buffer otherwise);
-    axis       mesh axis name, or an (inner, outer) pair for a
-               hierarchical two-axis composition;
-    axis_size  ranks participating on ``axis`` (product over both for a
-               two-axis composition);
+    axis       mesh axis name, or an (inner, ..., outer) tuple for a
+               hierarchical multi-axis composition (innermost first);
+    axis_size  ranks participating on ``axis`` (product over all for a
+               multi-axis composition);
     dtype      element dtype name — part of the survey's feature vector
                (reduction cost and packetization differ by width);
     reduce_op  combine operator for reducing collectives;
@@ -40,7 +40,7 @@ class CollectiveRequest:
 
     op: str
     nbytes: int
-    axis: Union[str, Tuple[str, str], None] = None
+    axis: Union[str, Tuple[str, ...], None] = None
     axis_size: int = 1
     dtype: str = "float32"
     reduce_op: str = "add"
@@ -53,7 +53,8 @@ class CollectiveRequest:
 
     @property
     def hierarchical(self) -> bool:
-        """True when the request names a two-axis (inner, outer) composition."""
+        """True when the request names a multi-axis (inner, ..., outer)
+        composition."""
         return isinstance(self.axis, tuple)
 
     @classmethod

@@ -23,6 +23,7 @@ from repro.core.analytical.hierarchy import (
     best_hierarchical,
     flat_vs_hierarchical,
     hierarchical_allreduce_cost,
+    padded_allreduce_schedule,
 )
 from repro.core.analytical.fitting import (
     fit_hockney,

@@ -28,6 +28,7 @@ def allreduce_phases(sizes: Sequence[int], m: float
 
     Single source of truth for the byte flow: the simulator-timing,
     decision-lookup and cost-model walks all iterate this schedule.
+    Handles any level count (1 level degenerates to one flat all-reduce).
     """
     assert sizes, "need at least one level"
     phases: List[Tuple[int, str, float]] = []
@@ -40,6 +41,42 @@ def allreduce_phases(sizes: Sequence[int], m: float
     phases.append((len(sizes) - 1, "all_reduce", bytes_here))
     for i, shard in reversed(shards):
         phases.append((i, "all_gather", shard))
+    return phases
+
+
+def padded_allreduce_schedule(sizes: Sequence[int], n_elems: int
+                              ) -> List[Tuple[int, str, int, int]]:
+    """The EXACT integer schedule the N-level all-reduce composition
+    executes: ``(level_index, op, in_elems, out_elems)`` per sequential
+    phase, innermost levels first on the way up and last on the way down.
+
+    ``in_elems`` is the element count the phase moves — the zero-padded
+    buffer entering each reduce-scatter (padded up to a multiple of that
+    level's fan-out), the per-rank shard for the top all-reduce and for
+    each all-gather. ``out_elems`` is the buffer the phase leaves behind
+    AFTER the composition's bookkeeping: the 1/p shard after a
+    reduce-scatter, and the gathered buffer truncated back to the length
+    that entered the matching reduce-scatter (padding introduced on the
+    way up is stripped on the way down, so the final buffer is exactly
+    ``n_elems``).
+
+    This is the integer mirror of :func:`allreduce_phases` — the executor
+    (``repro.core.collectives.hierarchical``) and the plan expansion
+    (``Communicator.plan``) both walk it, so the rendered plan can never
+    disagree with the executed byte counts.
+    """
+    assert sizes, "need at least one level"
+    phases: List[Tuple[int, str, int, int]] = []
+    stack: List[Tuple[int, int, int]] = []      # (level, pre_pad, padded)
+    elems = int(n_elems)
+    for i, p in enumerate(sizes[:-1]):
+        padded = elems + (-elems) % p
+        phases.append((i, "reduce_scatter", padded, padded // p))
+        stack.append((i, elems, padded))
+        elems = padded // p
+    phases.append((len(sizes) - 1, "all_reduce", elems, elems))
+    for i, pre_pad, padded in reversed(stack):
+        phases.append((i, "all_gather", padded // sizes[i], pre_pad))
     return phases
 
 

@@ -19,7 +19,11 @@ from repro.core.collectives.hierarchical import (
     hierarchical_all_gather,
     hierarchical_all_reduce,
     hierarchical_reduce_scatter,
+    multilevel_all_gather,
+    multilevel_all_reduce,
+    multilevel_reduce_scatter,
     sync_gradients_hierarchical,
+    sync_gradients_multilevel,
 )
 
 __getattr__ = deprecated_getattr(__name__)

@@ -1,37 +1,53 @@
-"""Hierarchical collective compositions over two mesh axes.
+"""Hierarchical collective compositions over N mesh axes.
 
-The production-library schedule for multi-pod all-reduce (HiCCL, NCCL
-tree/ring hybrids): reduce-scatter on the INNER axis (fast links carry the
-full buffer), all-reduce on the OUTER axis (slow links carry only the
-1/p_inner shard), all-gather on the inner axis. Each phase picks its own
-{algorithm, segments} from a per-level decision source, so the inner
-phases tune against the ICI profile and the outer phase against the DCN
-profile.
+The production-library schedule for multi-level all-reduce (HiCCL, NCCL
+tree/ring hybrids, MagPIe/Cheetah-style multi-level collectives):
+reduce-scatter INWARD level by level (the fastest links carry the full
+buffer, each slower tier only the shrinking shard), all-reduce at the
+OUTERMOST level (the machine-spanning links move just the
+1/prod(inner fan-outs) shard), then all-gather back OUTWARD. Each phase
+picks its own {algorithm, segments} from a per-level decision source, so
+every tier tunes against its own fabric profile (intra-host ICI vs
+intra-pod vs cross-pod DCN).
 
-Beyond all-reduce, reduce-scatter and all-gather also compose over two
+``levels`` are innermost first: ``(axis_name, axis_size)`` pairs.
+``level_keys`` address the decision source's tables per level —
+positional indices by default, or names ("intra_pod") when the
+artifact's naming is known. The exact byte flow (padding on the way in,
+truncation on the way out) comes from
+``repro.core.analytical.hierarchy.padded_allreduce_schedule`` — the same
+schedule `Communicator.plan` expands, so the rendered plan can never
+disagree with the executed lookups.
+
+Beyond all-reduce, reduce-scatter and all-gather also compose over N
 axes:
 
-  * ``hierarchical_reduce_scatter`` — reduce-scatter(inner) then
-    reduce-scatter(outer): the cross-level shard at rank (outer o,
-    inner i) is global chunk ``i * outer_size + o`` (inner-major), each
-    1/(p_i*p_o) of the buffer, fully summed;
-  * ``hierarchical_all_gather`` — all-gather(outer) then
-    all-gather(inner): the exact inverse, reassembling those chunks into
-    the full buffer in original order.
+  * ``multilevel_reduce_scatter`` — reduce-scatter innermost-out: the
+    cross-level shard at rank (outer o, ..., inner i) is global chunk
+    ``i * prod(outer sizes) + ... + o`` (inner-major), each
+    1/prod(sizes) of the buffer, fully summed;
+  * ``multilevel_all_gather`` — all-gather outermost-in: the exact
+    inverse, reassembling those chunks into the full buffer in original
+    order.
 
-Functions run INSIDE shard_map (manual over both axes), same convention
-as ``repro.core.collectives.algorithms``. The compositions are exact for
-op="add": reduce-scatter partial sums are disjoint, so the outer
-all-reduce and inner all-gather reassemble the same floating-point values
-a flat schedule would produce per shard.
+Functions run INSIDE shard_map (manual over every named axis), same
+convention as ``repro.core.collectives.algorithms``. The compositions
+are exact for op="add": reduce-scatter partial sums are disjoint, so the
+outer phases and the gathers reassemble the same floating-point values a
+flat schedule would produce per shard.
+
+The two-axis spellings (``hierarchical_all_reduce`` & co.) are the
+N=2 special case, kept as the stable entry points for existing callers.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 
-from repro.core.collectives.algorithms import _flatten_pad, _unflatten
+from repro.core.analytical.hierarchy import padded_allreduce_schedule
+from repro.core.collectives.algorithms import _flatten_pad
 from repro.core.collectives.dispatch import (
     CollectiveSpec,
     DecisionSource,
@@ -50,6 +66,142 @@ def _level_spec(decision, level, op: str, nbytes: int, p: int
     return decision.spec_for(op, nbytes, p)
 
 
+def _keys(levels: Sequence[Tuple[str, int]], level_keys) -> list:
+    if level_keys is None:
+        return list(range(len(levels)))
+    keys = list(level_keys)
+    assert len(keys) == len(levels), \
+        f"{len(keys)} level keys for {len(levels)} levels"
+    return keys
+
+
+# ---------------------------------------------------------------------------
+# N-level compositions
+# ---------------------------------------------------------------------------
+def multilevel_all_reduce(
+    x,
+    levels: Sequence[Tuple[str, int]],
+    decision: Optional[DecisionSource] = None,
+    *,
+    op: str = "add",
+    level_keys: Optional[Sequence] = None,
+):
+    """reduce-scatter inward -> all-reduce at the top -> all-gather outward
+    over any number of mesh axes (``levels`` innermost first).
+
+    One level degenerates to a flat tuned all-reduce on that axis. The
+    phase-by-phase element counts — including the zero-padding each
+    inward reduce-scatter introduces and the matching truncation on the
+    way out — walk ``padded_allreduce_schedule``, so the decision lookups
+    here are byte-identical to the plan `Communicator.explain` renders.
+    """
+    assert levels, "need at least one level"
+    keys = _keys(levels, level_keys)
+    itemsize = x.dtype.itemsize
+    shape = x.shape
+    flat = x.reshape(-1)
+    for lvl, phase_op, in_elems, out_elems in padded_allreduce_schedule(
+            [p for _, p in levels], flat.size):
+        axis, p = levels[lvl]
+        key = keys[lvl]
+        if phase_op == "reduce_scatter" and flat.size < in_elems:
+            flat = jnp.pad(flat, (0, in_elems - flat.size))
+        spec = _level_spec(decision, key, phase_op, in_elems * itemsize, p)
+        flat = apply_collective(phase_op, flat, axis, p, spec,
+                                reduce_op=op).reshape(-1)
+        if phase_op == "all_gather" and flat.size > out_elems:
+            flat = flat[:out_elems]
+    return flat.reshape(shape)
+
+
+def multilevel_reduce_scatter(
+    x,
+    levels: Sequence[Tuple[str, int]],
+    decision: Optional[DecisionSource] = None,
+    *,
+    op: str = "add",
+    level_keys: Optional[Sequence] = None,
+):
+    """reduce-scatter at every level, innermost first.
+
+    Returns this rank's flat 1/prod(sizes) shard of the global sum. With
+    levels innermost-first ``(i, ..., o)``, rank (o, ..., i) holds global
+    chunk ``i * prod(outer sizes) + ... + o`` (inner-major) of the
+    (zero-padded) flattened buffer — the layout
+    ``multilevel_all_gather`` inverts. The innermost phase carries the
+    full buffer on the fast links; each outer tier only ever sees the
+    already-scattered partials.
+    """
+    assert levels, "need at least one level"
+    keys = _keys(levels, level_keys)
+    itemsize = x.dtype.itemsize
+    total = 1
+    for _, p in levels:
+        total *= p
+    flat, _, _ = _flatten_pad(x, total)
+    for (axis, p), key in zip(levels, keys):
+        spec = _level_spec(decision, key, "reduce_scatter",
+                           flat.size * itemsize, p)
+        flat = apply_collective("reduce_scatter", flat, axis, p, spec,
+                                reduce_op=op).reshape(-1)
+    return flat
+
+
+def multilevel_all_gather(
+    x,
+    levels: Sequence[Tuple[str, int]],
+    decision: Optional[DecisionSource] = None,
+    *,
+    level_keys: Optional[Sequence] = None,
+):
+    """all-gather at every level, outermost first.
+
+    The inverse of ``multilevel_reduce_scatter``: flat per-rank shards
+    come back as the full prod(sizes)-times-larger concatenation, chunks
+    ordered inner-major. The outer tiers move only the small shards
+    across the slow links before the fast inner links fan the
+    tier-complete chunks out.
+    """
+    assert levels, "need at least one level"
+    keys = _keys(levels, level_keys)
+    itemsize = x.dtype.itemsize
+    flat = x.reshape(-1)
+    for (axis, p), key in reversed(list(zip(levels, keys))):
+        spec = _level_spec(decision, key, "all_gather",
+                           flat.size * itemsize, p)
+        flat = apply_collective("all_gather", flat, axis, p,
+                                spec).reshape(-1)
+    return flat
+
+
+def sync_gradients_multilevel(
+    grads,
+    levels: Sequence[Tuple[str, int]],
+    decision: Optional[DecisionSource] = None,
+    *,
+    mean: bool = True,
+    level_keys: Optional[Sequence] = None,
+):
+    """N-level all-reduce of every gradient leaf — the multi-tier
+    replacement for flat sync + per-axis psum. Must be called inside
+    shard_map (manual over every level's axis)."""
+    denom = 1
+    for _, p in levels:
+        denom *= p
+
+    def sync_leaf(g):
+        out = multilevel_all_reduce(g, levels, decision,
+                                    level_keys=level_keys)
+        if mean:
+            out = out / denom
+        return out
+
+    return jax.tree.map(sync_leaf, grads)
+
+
+# ---------------------------------------------------------------------------
+# two-axis spellings (the stable N=2 entry points)
+# ---------------------------------------------------------------------------
 def hierarchical_all_reduce(
     x,
     inner_axis: str,
@@ -68,26 +220,9 @@ def hierarchical_all_reduce(
     positional by default (first = fastest links, last = machine-spanning),
     or by name ("intra_pod") when the artifact's naming is known.
     """
-    itemsize = x.dtype.itemsize
-    flat, shape, size = _flatten_pad(x, inner_size)
-
-    spec = _level_spec(decision, inner_level, "reduce_scatter",
-                       flat.size * itemsize, inner_size)
-    shard = apply_collective("reduce_scatter", flat, inner_axis, inner_size,
-                             spec, reduce_op=op)
-    shard = shard.reshape(-1)
-
-    shard_bytes = shard.size * itemsize
-    spec = _level_spec(decision, outer_level, "all_reduce", shard_bytes,
-                       outer_size)
-    shard = apply_collective("all_reduce", shard, outer_axis, outer_size,
-                             spec, reduce_op=op)
-
-    spec = _level_spec(decision, inner_level, "all_gather", shard_bytes,
-                       inner_size)
-    full = apply_collective("all_gather", shard, inner_axis, inner_size,
-                            spec)
-    return _unflatten(full.reshape(-1), shape, size)
+    return multilevel_all_reduce(
+        x, [(inner_axis, inner_size), (outer_axis, outer_size)], decision,
+        op=op, level_keys=[inner_level, outer_level])
 
 
 def hierarchical_reduce_scatter(
@@ -102,27 +237,11 @@ def hierarchical_reduce_scatter(
     inner_level=0,
     outer_level=-1,
 ):
-    """reduce-scatter(inner) -> reduce-scatter(outer).
-
-    Returns this rank's flat 1/(inner*outer) shard of the global sum.
-    Rank (outer o, inner i) holds global chunk ``i * outer_size + o`` of
-    the (zero-padded) flattened buffer — the layout
-    ``hierarchical_all_gather`` inverts. The inner phase carries the full
-    buffer on the fast links; the slow outer links only ever see the
-    1/p_inner partials.
-    """
-    itemsize = x.dtype.itemsize
-    flat, _, _ = _flatten_pad(x, inner_size * outer_size)
-
-    spec = _level_spec(decision, inner_level, "reduce_scatter",
-                       flat.size * itemsize, inner_size)
-    shard = apply_collective("reduce_scatter", flat, inner_axis, inner_size,
-                             spec, reduce_op=op).reshape(-1)
-
-    spec = _level_spec(decision, outer_level, "reduce_scatter",
-                       shard.size * itemsize, outer_size)
-    return apply_collective("reduce_scatter", shard, outer_axis, outer_size,
-                            spec, reduce_op=op).reshape(-1)
+    """reduce-scatter(inner) -> reduce-scatter(outer); see
+    ``multilevel_reduce_scatter`` for the chunk layout."""
+    return multilevel_reduce_scatter(
+        x, [(inner_axis, inner_size), (outer_axis, outer_size)], decision,
+        op=op, level_keys=[inner_level, outer_level])
 
 
 def hierarchical_all_gather(
@@ -136,27 +255,11 @@ def hierarchical_all_gather(
     inner_level=0,
     outer_level=-1,
 ):
-    """all-gather(outer) -> all-gather(inner).
-
-    The inverse of ``hierarchical_reduce_scatter``: flat per-rank shards
-    come back as the full (inner*outer)-times-larger concatenation, chunks
-    ordered inner-major (rank (o, i)'s shard lands at index
-    ``i * outer_size + o``). The outer phase moves only the small shard
-    across the slow links before the fast inner links fan the pod-complete
-    chunks out.
-    """
-    itemsize = x.dtype.itemsize
-    flat = x.reshape(-1)
-
-    spec = _level_spec(decision, outer_level, "all_gather",
-                       flat.size * itemsize, outer_size)
-    chunk = apply_collective("all_gather", flat, outer_axis, outer_size,
-                             spec).reshape(-1)
-
-    spec = _level_spec(decision, inner_level, "all_gather",
-                       chunk.size * itemsize, inner_size)
-    return apply_collective("all_gather", chunk, inner_axis, inner_size,
-                            spec).reshape(-1)
+    """all-gather(outer) -> all-gather(inner); the exact inverse of
+    ``hierarchical_reduce_scatter``."""
+    return multilevel_all_gather(
+        x, [(inner_axis, inner_size), (outer_axis, outer_size)], decision,
+        level_keys=[inner_level, outer_level])
 
 
 def sync_gradients_hierarchical(
@@ -171,17 +274,9 @@ def sync_gradients_hierarchical(
     inner_level=0,
     outer_level=-1,
 ):
-    """Hierarchical all-reduce of every gradient leaf — the multi-pod
+    """Two-level all-reduce of every gradient leaf — the multi-pod
     replacement for flat sync + cross-pod psum. Must be called inside
     shard_map (manual over both axes)."""
-    denom = inner_size * outer_size
-
-    def sync_leaf(g):
-        out = hierarchical_all_reduce(
-            g, inner_axis, inner_size, outer_axis, outer_size, decision,
-            inner_level=inner_level, outer_level=outer_level)
-        if mean:
-            out = out / denom
-        return out
-
-    return jax.tree.map(sync_leaf, grads)
+    return sync_gradients_multilevel(
+        grads, [(inner_axis, inner_size), (outer_axis, outer_size)],
+        decision, mean=mean, level_keys=[inner_level, outer_level])

@@ -8,9 +8,11 @@ from repro.core.topology.decision import (
 from repro.core.topology.model import (
     DEFAULT_LEVEL_PROFILES,
     LEVEL_NAMES,
+    SYNC_AXES,
     MeshLevel,
     Topology,
     fit_profile,
+    level_names_for,
     probe_profile,
     probe_topology,
 )

@@ -30,6 +30,21 @@ from repro.core.tuning.simulator import NetworkProfile
 #: canonical level names, innermost first
 LEVEL_NAMES = ("intra_host", "intra_pod", "cross_pod")
 
+#: mesh axes carrying the gradient-sync tiers, innermost first: a 2-level
+#: topology rides ("data", "pod"), the full 3-level stack adds "dcn"
+SYNC_AXES = ("data", "pod", "dcn")
+
+
+def level_names_for(n: int) -> Tuple[str, ...]:
+    """Canonical names for ``n`` stacked tiers, innermost first: one tier
+    is the ICI baseline ("intra_pod"); deeper stacks pull in "intra_host"
+    below and "cross_pod" above. Single source of the rule shared by
+    ``Topology.from_spec``, ``launch.mesh.local_topology`` and the
+    per-level live probe."""
+    if not 1 <= n <= len(LEVEL_NAMES):
+        raise ValueError(f"{n} levels; supported 1..{len(LEVEL_NAMES)}")
+    return ("intra_pod",) if n == 1 else LEVEL_NAMES[len(LEVEL_NAMES) - n:]
+
 #: default per-level fabrics: intra-host is a short hop at double ICI
 #: bandwidth; intra-pod is the v5e ICI baseline; cross-pod is DCN — an
 #: order of magnitude slower per byte, several microseconds to launch.
@@ -138,8 +153,13 @@ class Topology:
                   axes: Optional[Sequence[Optional[str]]] = None
                   ) -> "Topology":
         """Parse a mesh-shape-like spec, OUTERMOST first (``"2x16"`` = 2
-        pods of 16). Level names are assigned innermost-out from
-        LEVEL_NAMES; profiles come from DEFAULT_LEVEL_PROFILES."""
+        pods of 16; ``"2x2x2"`` = 2 DCN slices of 2 pods of 2). Level
+        names are assigned innermost-out from LEVEL_NAMES; profiles come
+        from DEFAULT_LEVEL_PROFILES. Default axes are the gradient-sync
+        tiers, innermost first ("data" inside the host, "pod" across
+        pods, "dcn" across the WAN-class links) — pass ``axes``
+        explicitly for topologies whose innermost tier carries tensor
+        parallelism ("model") instead."""
         sizes = [int(tok) for tok in spec.lower().split("x")]
         if not sizes or any(s < 1 for s in sizes):
             raise ValueError(f"bad topology spec {spec!r}")
@@ -147,12 +167,9 @@ class Topology:
             raise ValueError(f"topology spec {spec!r} has {len(sizes)} "
                              f"levels; at most {len(LEVEL_NAMES)} supported")
         sizes = sizes[::-1]                       # innermost first
-        # 1 level: the ICI baseline; 2: pod + cross-pod; 3: host too
-        names = ("intra_pod",) if len(sizes) == 1 \
-            else LEVEL_NAMES[len(LEVEL_NAMES) - len(sizes):]
+        names = level_names_for(len(sizes))
         if axes is None:
-            axes = {1: ("data",), 2: ("data", "pod"),
-                    3: ("model", "data", "pod")}[len(sizes)]
+            axes = SYNC_AXES[:len(sizes)]
         return cls(tuple(
             MeshLevel(n, s, DEFAULT_LEVEL_PROFILES[n], axis=a)
             for n, s, a in zip(names, sizes, axes)))
@@ -206,14 +223,17 @@ def probe_profile(measure: Callable[[int], float],
     return fit_profile(ms, [float(measure(m)) for m in ms], base=base)
 
 
-def probe_topology(levels: Sequence[Tuple[str, int,
-                                          Callable[[int], float]]],
+def probe_topology(levels: Sequence[Sequence],
                    ms: Sequence[int] = PROBE_SIZES) -> Topology:
     """Build a Topology by probing each level: ``levels`` is innermost-first
-    ``(name, size, measure_fn)`` triples."""
+    ``(name, size, measure_fn)`` triples, or ``(name, size, measure_fn,
+    axis)`` quadruples when the caller knows which mesh axis carries the
+    level (the per-level live probe, ``repro.comms.probe``, does)."""
     out = []
-    for name, size, measure in levels:
+    for entry in levels:
+        name, size, measure = entry[0], entry[1], entry[2]
+        axis = entry[3] if len(entry) > 3 else None
         base = DEFAULT_LEVEL_PROFILES.get(name)
         out.append(MeshLevel(name, size, probe_profile(measure, ms, base),
-                             axis=None))
+                             axis=axis))
     return Topology(tuple(out))

@@ -26,7 +26,11 @@ from repro.core.tuning.simulator import NetworkSimulator
 from repro.core.tuning.space import MESSAGE_SIZES, Method, methods_for
 from repro.core.tuning.tuners import make_tuner
 
-#: ops each phase of the hierarchical composition needs tuned
+#: ops each phase of the hierarchical composition needs tuned: every
+#: non-top level (inner AND middle tiers of a 3-level stack) carries a
+#: reduce-scatter on the way in and an all-gather on the way out (plus
+#: all_reduce so the level can also serve flat requests); only the
+#: outermost level runs the top all-reduce
 INNER_OPS = ("reduce_scatter", "all_gather", "all_reduce")
 OUTER_OPS = ("all_reduce",)
 

@@ -16,7 +16,13 @@ from typing import Tuple
 import jax
 
 from repro import compat
-from repro.core.topology import DEFAULT_LEVEL_PROFILES, MeshLevel, Topology
+from repro.core.topology import (
+    DEFAULT_LEVEL_PROFILES,
+    SYNC_AXES,
+    MeshLevel,
+    Topology,
+    level_names_for,
+)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Tuple:
@@ -31,13 +37,19 @@ def make_production_mesh(*, multi_pod: bool = False) -> Tuple:
     return mesh, local_topology(mesh)
 
 
-def make_local_mesh(model_parallel: int = 1, pods: int = 1):
+def make_local_mesh(model_parallel: int = 1, pods: int = 1, dcn: int = 1):
     """Smoke/test mesh over whatever devices exist. ``pods > 1`` splits the
     data axis into ("pod", "data") to exercise the hierarchical gradient
-    sync on simulated devices."""
+    sync on simulated devices; ``dcn > 1`` stacks the third tier on top
+    (("dcn", "pod", "data") — the full host/pod/DCN hierarchy)."""
     n = jax.device_count()
-    assert n % (model_parallel * pods) == 0, \
-        f"{n} devices not divisible by {pods} pods x {model_parallel} mp"
+    assert n % (model_parallel * pods * dcn) == 0, \
+        f"{n} devices not divisible by {dcn} dcn x {pods} pods x " \
+        f"{model_parallel} mp"
+    if dcn > 1:
+        return compat.make_mesh(
+            (dcn, pods, n // (dcn * pods * model_parallel), model_parallel),
+            ("dcn", "pod", "data", "model"))
     if pods > 1:
         return compat.make_mesh(
             (pods, n // (pods * model_parallel), model_parallel),
@@ -47,11 +59,16 @@ def make_local_mesh(model_parallel: int = 1, pods: int = 1):
 
 
 def local_topology(mesh) -> Topology:
-    """A Topology matching a local mesh's data axes (default profiles)."""
-    levels = [MeshLevel("intra_pod", mesh.shape["data"],
-                        DEFAULT_LEVEL_PROFILES["intra_pod"], axis="data")]
-    if "pod" in mesh.axis_names:
-        levels.append(MeshLevel("cross_pod", mesh.shape["pod"],
-                                DEFAULT_LEVEL_PROFILES["cross_pod"],
-                                axis="pod"))
-    return Topology(tuple(levels))
+    """A Topology matching a local mesh's data axes (default profiles).
+
+    Level names follow the tier count, innermost first: one sync axis is
+    the ICI baseline ("intra_pod"); "pod" stacks "cross_pod" on top; a
+    "dcn" axis pushes the naming down a tier (data becomes "intra_host",
+    pod "intra_pod", dcn "cross_pod") — the same rule as
+    ``Topology.from_spec``."""
+    axes = [a for a in SYNC_AXES if a in mesh.axis_names]
+    names = level_names_for(len(axes))
+    return Topology(tuple(
+        MeshLevel(name, mesh.shape[axis], DEFAULT_LEVEL_PROFILES[name],
+                  axis=axis)
+        for name, axis in zip(names, axes)))

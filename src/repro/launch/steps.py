@@ -167,10 +167,11 @@ def build_train_step(
                 grads, opt_state, params, lr_scale=lr_scale(opt_state.step))
             return new_params, new_opt, {"loss": loss, **aux}
     else:
-        # partial-manual shard_map over the data axes: per-shard backward,
-        # tuned per-leaf gradient sync through the Communicator (which
-        # picks flat, psum-topped, or the full per-level hierarchical
-        # composition), local optimizer step on replicated params
+        # partial-manual shard_map over the data axes (up to three tiers:
+        # "dcn" > "pod" > "data"): per-shard backward, tuned per-leaf
+        # gradient sync through the Communicator (which picks flat,
+        # psum-topped, or the full N-level hierarchical composition),
+        # local optimizer step on replicated params
         def fn(params, opt_state, batch):
             def inner(params, opt_state, batch):
                 (loss, aux), grads = grad_fn(params, batch)

@@ -56,12 +56,14 @@ def main():
                     help="print the per-leaf gradient-sync collective plan "
                          "(algorithm/segments/level) before training")
     ap.add_argument("--topology", default=None,
-                    help="network hierarchy: a 'PODSxDATA' spec (e.g. 2x4) "
-                         "or a Topology JSON path. Splits the data axis "
-                         "into ('pod', 'data'); with a schema-3 "
-                         "hierarchical --tuning-table, gradient sync runs "
-                         "the per-level reduce-scatter / all-reduce / "
-                         "all-gather composition")
+                    help="network hierarchy: a 'PODSxDATA' spec (e.g. 2x4),"
+                         " a 3-tier 'DCNxPODSxDATA' spec (e.g. 2x2x2), or "
+                         "a Topology JSON path. Splits the data axis into "
+                         "('pod', 'data') — plus 'dcn' on top for three "
+                         "tiers; with a schema-3 hierarchical "
+                         "--tuning-table, gradient sync runs the per-level "
+                         "reduce-scatter / all-reduce / all-gather "
+                         "composition across every tier")
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--log-every", type=int, default=1)
@@ -74,29 +76,40 @@ def main():
                         global_batch=args.batch, kind="train")
     topology = None
     if args.topology:
-        from repro.core.topology import Topology
+        import dataclasses as _dc
+
+        from repro.core.topology import SYNC_AXES, Topology
         if os.path.exists(args.topology):
             topology = Topology.load(args.topology)
         else:
             topology = Topology.from_spec(args.topology)
-        # probe-derived topologies carry no mesh axes: map the outermost
-        # level onto "pod" and the innermost onto "data" so a multi-level
-        # topology can never silently degrade to flat sync
-        pod_lv = next((lv for lv in topology.levels if lv.axis == "pod"),
-                      topology.outer if len(topology.levels) > 1 else None)
-        pods = pod_lv.size if pod_lv else 1
+        # probe-derived topologies carry no mesh axes: assign the sync
+        # axes positionally (innermost -> "data", then "pod", then "dcn")
+        # so a multi-level topology can never silently degrade to flat
+        # sync
+        if all(lv.axis is None for lv in topology.levels):
+            topology = Topology(tuple(
+                _dc.replace(lv, axis=ax)
+                for lv, ax in zip(topology.levels, SYNC_AXES)))
+
+        def axis_size(axis):
+            lv = next((lv for lv in topology.levels if lv.axis == axis),
+                      None)
+            return lv.size if lv else 1
+
+        pods, dcn = axis_size("pod"), axis_size("dcn")
         mesh = make_local_mesh(model_parallel=args.model_parallel,
-                               pods=pods)
+                               pods=pods, dcn=dcn)
         data_lv = next((lv for lv in topology.levels if lv.axis == "data"),
                        topology.inner if len(topology.levels) > 1 else None)
         data_spec = data_lv.size if data_lv else None
         if data_spec is not None and mesh.shape["data"] != data_spec:
             raise SystemExit(
-                f"--topology names {data_spec} data ranks per pod but the "
-                f"device count yields {mesh.shape['data']} "
-                f"({jax.device_count()} devices / {pods} pods / "
-                f"{args.model_parallel} model-parallel); a table tuned at "
-                f"fan-out {data_spec} would silently mis-decide")
+                f"--topology names {data_spec} data ranks per group but "
+                f"the device count yields {mesh.shape['data']} "
+                f"({jax.device_count()} devices / {dcn} dcn / {pods} pods "
+                f"/ {args.model_parallel} model-parallel); a table tuned "
+                f"at fan-out {data_spec} would silently mis-decide")
         model_lv = next((lv for lv in topology.levels
                          if lv.axis == "model"), None)
         if model_lv is not None and model_lv.size != args.model_parallel:
@@ -120,6 +133,12 @@ def main():
         print(f"tuning table: {table_path} ({comm.describe()})")
     elif args.probe_fabric:
         print(f"probed fabric: {comm.probed}")
+    if args.probe_fabric and comm.probed_topology is not None:
+        # per-level probes synthesized a full Topology from the live mesh
+        for lv in comm.probed_topology.levels:
+            print(f"probed level {lv.name} (axis={lv.axis}, "
+                  f"fan-out {lv.size}): launch={lv.profile.launch:.2e}s "
+                  f"byte_time={lv.profile.byte_time:.2e}s/B")
     coll = CollectiveConfig(algorithm=args.collective, decision=table_path)
 
     fn, _, in_sh, out_sh, donate = build_train_step(

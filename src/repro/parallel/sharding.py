@@ -18,7 +18,9 @@ from repro.configs.base import ModelConfig, ParallelConfig, ShapeConfig
 
 
 def dp_axes(mesh) -> Tuple[str, ...]:
-    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    """Data-parallel mesh axes, outermost first ("dcn" across the WAN
+    links, "pod" across pods, "data" inside)."""
+    return tuple(a for a in ("dcn", "pod", "data") if a in mesh.axis_names)
 
 
 def dp_size(mesh) -> int:

@@ -1,0 +1,222 @@
+"""Oracle validation of 3-level (host/pod/DCN) gradient sync on an
+8-device 2x2x2 simulated mesh.
+
+A `Communicator` holding a 3-level `HierarchicalDecision` over the
+("dcn", "pod", "data") mesh must:
+
+  * `sync_gradients` bit-identical (within float tolerance for the
+    reduction order) to a global psum over all three axes, on a ragged
+    gradient pytree;
+  * run the N-level compositions (`all_reduce`, reduce-scatter ->
+    all-gather round trip) equal to the global-sum oracle;
+  * `explain_gradients()` equal to the recorded per-level lookups the
+    executing ops actually perform — every one of the three levels
+    present in the plan (the regression for the old PlanReport that
+    silently dropped levels beyond the second).
+
+Same pattern as validate_communicator.py: run as a subprocess (sets the
+device count before importing jax), prints OK/FAIL lines and a final
+``FAILS: n``; exit 1 on any FAIL.
+"""
+import os, sys
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+import numpy as np
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+from repro import compat
+from repro.comms import Communicator
+from repro.core.topology.decision import HierarchicalDecision
+from repro.core.tuning.decision import DecisionTable
+from repro.core.tuning.space import Method
+
+DCN, POD, DATA = 2, 2, 2
+mesh = compat.make_mesh((DCN, POD, DATA), ("dcn", "pod", "data"))
+
+fails = []
+
+
+def check(name, ok, extra=""):
+    print(("OK  " if ok else "FAIL"), name, extra)
+    if not ok:
+        fails.append(name)
+
+
+def check_close(name, got, want, tol=2e-5):
+    err = float(jnp.max(jnp.abs(jnp.asarray(got, jnp.float32)
+                                - jnp.asarray(want, jnp.float32))))
+    check(name, err <= tol, "err=%.3g" % err)
+
+
+def per_rank(fn, xs):
+    """xs: (dcn, pod, data, ...) distinct per-rank inputs; fn sees the
+    local slice, result gathered back to (dcn, pod, data, ...)."""
+    def wrapped(x):
+        return fn(x[0, 0, 0])[None, None, None]
+    return jax.jit(compat.shard_map(
+        wrapped, mesh=mesh, in_specs=P("dcn", "pod", "data"),
+        out_specs=P("dcn", "pod", "data"), check_vma=False))(xs)
+
+
+class RecordingComm(Communicator):
+    """Logs every decision lookup the executing ops perform, in order."""
+
+    def __init__(self, comm):
+        super().__init__(comm.mesh, policy=comm._policy,
+                         topology=comm.topology, probed=comm.probed,
+                         a2a_algorithm=comm._a2a)
+        self.log = []
+
+    def spec(self, req):
+        s = super().spec(req)
+        self.log.append((req.op, req.nbytes, req.axis_size, None,
+                         s.algorithm, s.segments))
+        return s
+
+    def spec_for_level(self, level, op, nbytes, p):
+        s = super().spec_for_level(level, op, nbytes, p)
+        name = self._policy._level_name(level) \
+            if self._policy.kind == "hier" else None
+        self.log.append((op, nbytes, p, name, s.algorithm, s.segments))
+        return s
+
+
+rng = np.random.default_rng(7)
+
+# three levels, each picking distinct non-trivial algorithms so a phase
+# answered from the wrong level is caught by the recording probe
+hier = HierarchicalDecision([
+    ("intra_host", DecisionTable({
+        ("reduce_scatter", DATA, 1024): Method("ring", 1),
+        ("all_gather", DATA, 1024): Method("bruck", 1),
+        ("all_reduce", DATA, 1024): Method("rabenseifner", 1),
+    })),
+    ("intra_pod", DecisionTable({
+        ("reduce_scatter", POD, 1024): Method("recursive_halving", 1),
+        ("all_gather", POD, 1024): Method("ring", 1),
+        ("all_reduce", POD, 1024): Method("recursive_doubling", 1),
+    })),
+    ("cross_pod", DecisionTable({
+        ("all_reduce", DCN, 1024): Method("recursive_doubling", 1),
+        ("reduce_scatter", DCN, 1024): Method("ring", 1),
+        ("all_gather", DCN, 1024): Method("ring", 1),
+    })),
+])
+
+comm_hier = Communicator.create(mesh, artifact=hier)
+comm_xla = Communicator.create(mesh)
+
+check("policy/hierarchical", comm_hier.hierarchical)
+
+# ---------------------------------------------------------------------------
+# 1) 3-axis all-reduce composition vs the global-sum oracle
+# ---------------------------------------------------------------------------
+AXES3 = ("data", "pod", "dcn")
+for cname, comm in (("hier", comm_hier), ("xla", comm_xla)):
+    for m in (64, 1000):
+        xs = jnp.asarray(rng.normal(size=(DCN, POD, DATA, m)), jnp.float32)
+        gsum = xs.sum((0, 1, 2))
+        want = jnp.broadcast_to(gsum[None, None, None],
+                                (DCN, POD, DATA, m))
+        got = per_rank(lambda x, c=comm: c.all_reduce(x, AXES3), xs)
+        check_close(f"three_level_all_reduce/{cname}/{m}", got, want,
+                    tol=2e-4)
+
+        # reduce-scatter -> all-gather must invert exactly back to the
+        # padded global sum (disjoint partials; movement is exact)
+        pad = (-m) % (DCN * POD * DATA)
+        want_rs = jnp.broadcast_to(
+            jnp.pad(gsum, (0, pad))[None, None, None],
+            (DCN, POD, DATA, m + pad))
+        got_rs = per_rank(
+            lambda x, c=comm: c.all_gather(
+                c.reduce_scatter(x, AXES3), AXES3), xs)
+        check_close(f"three_level_rs_ag_roundtrip/{cname}/{m}", got_rs,
+                    want_rs, tol=2e-4)
+
+# ---------------------------------------------------------------------------
+# 2) sync_gradients == global psum mean, ragged tree
+# ---------------------------------------------------------------------------
+tree = {"w": jnp.asarray(rng.normal(size=(DCN, POD, DATA, 33, 7)),
+                         jnp.float32),
+        "b": jnp.asarray(rng.normal(size=(DCN, POD, DATA, 5)),
+                         jnp.float32)}
+want_tree = jax.tree.map(lambda a: a.mean((0, 1, 2)), tree)
+
+
+def psum_sync(t):
+    """The flat oracle: one global psum over all three axes, averaged."""
+    def leaf(g):
+        return jax.lax.psum(g, ("dcn", "pod", "data")) / (DCN * POD * DATA)
+    return jax.tree.map(leaf, t)
+
+
+def run_sync(sync_leaf_tree):
+    def sync(t):
+        local = jax.tree.map(lambda a: a[0, 0, 0], t)
+        out = sync_leaf_tree(local)
+        return jax.tree.map(lambda a: a[None, None, None], out)
+    return jax.jit(compat.shard_map(
+        sync, mesh=mesh,
+        in_specs=(jax.tree.map(lambda _: P("dcn", "pod", "data"), tree),),
+        out_specs=jax.tree.map(lambda _: P("dcn", "pod", "data"), tree),
+        check_vma=False))(tree)
+
+
+oracle_tree = run_sync(psum_sync)
+for cname, comm in (("hier", comm_hier), ("xla", comm_xla)):
+    got_tree = run_sync(lambda t, c=comm: c.sync_gradients(t, mean=True))
+    for k in tree:
+        check_close(f"sync_gradients/{cname}/{k}", got_tree[k][0, 0, 0],
+                    want_tree[k], tol=2e-5)
+        # and against the executed global psum specifically (the flat
+        # baseline the composition replaces)
+        check_close(f"sync_vs_global_psum/{cname}/{k}",
+                    got_tree[k][0, 0, 0], oracle_tree[k][0, 0, 0],
+                    tol=2e-5)
+
+# ---------------------------------------------------------------------------
+# 3) explain_gradients == recorded per-level lookups, all three levels
+# ---------------------------------------------------------------------------
+rec = RecordingComm(comm_hier)
+
+
+def sync_rec(t):
+    local = jax.tree.map(lambda a: a[0, 0, 0], t)
+    out = rec.sync_gradients(local, mean=True)
+    return jax.tree.map(lambda a: a[None, None, None], out)
+
+
+jax.eval_shape(
+    compat.shard_map(
+        sync_rec, mesh=mesh,
+        in_specs=(jax.tree.map(lambda _: P("dcn", "pod", "data"), tree),),
+        out_specs=jax.tree.map(lambda _: P("dcn", "pod", "data"), tree),
+        check_vma=False),
+    tree)
+local_tree = jax.tree.map(
+    lambda a: jax.ShapeDtypeStruct(a.shape[3:], a.dtype), tree)
+plan = comm_hier.explain_gradients(local_tree)
+planned = [(e.request.op, e.request.nbytes, e.request.axis_size,
+            e.level, e.spec.algorithm, e.spec.segments)
+           for e in plan.entries if e.source != "psum"]
+check("explain_matches_executed", rec.log == planned,
+      f"\n  executed={rec.log}\n  planned ={planned}")
+
+# every leaf's plan reaches all three levels, five phases deep (the old
+# two-axis PlanReport dropped everything beyond the second level)
+levels_seen = {e.level for e in plan.entries}
+check("plan_has_all_levels",
+      levels_seen == {"intra_host", "intra_pod", "cross_pod"},
+      f"levels={levels_seen}")
+check("plan_depth_five_phases_per_leaf",
+      len(plan.entries) == 5 * len(jax.tree.leaves(local_tree)),
+      f"entries={len(plan.entries)}")
+phase_ops = [e.request.op for e in plan.entries][:5]
+check("plan_phase_order",
+      phase_ops == ["reduce_scatter", "reduce_scatter", "all_reduce",
+                    "all_gather", "all_gather"], f"ops={phase_ops}")
+
+print(f"FAILS: {len(fails)}")
+sys.exit(1 if fails else 0)

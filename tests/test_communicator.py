@@ -140,6 +140,22 @@ def test_three_level_artifact_resolves_level_by_axis():
                                        axis_size=2)).algorithm == "bruck"
 
 
+def test_committed_3level_sample_artifact_loads():
+    """The committed examples/artifacts 3-table schema-3 sample resolves
+    as a 3-level hierarchical policy with per-level addressing."""
+    import os
+    path = os.path.join(os.path.dirname(__file__), "..", "examples",
+                        "artifacts", "hierarchical_decision_3level.json")
+    comm = Communicator.create(artifact=path)
+    assert comm.hierarchical
+    assert "intra_host" in comm.describe()
+    for level in ("intra_host", "intra_pod", "cross_pod"):
+        spec = comm.spec_for_level(level, "all_reduce"
+                                   if level == "cross_pod"
+                                   else "reduce_scatter", 1 << 20, 2)
+        assert spec.algorithm != "xla"      # per-level tuned, not default
+
+
 def test_preloaded_hierarchical_container_keeps_composition(tmp_path):
     """An already-loaded MultiProfileArtifact with kind='hierarchical'
     must resolve exactly like the path-string form — a hierarchical

@@ -115,3 +115,32 @@ def test_train_cli_hierarchical_topology_8dev(tmp_path):
     assert "topology: cross_pod(2) > intra_pod(4)" in r.stdout
     assert "hierarchical, levels=['intra_pod', 'cross_pod']" in r.stdout
     assert "'pod': 2" in r.stdout and "step    1" in r.stdout
+
+
+def test_train_cli_three_level_topology_8dev(tmp_path):
+    """The acceptance path: --topology 2x2x2 + a 3-table schema-3
+    artifact on 8 simulated devices builds the ("dcn", "pod", "data")
+    mesh, routes sync_gradients through the 3-level composition, and
+    --explain prints plan entries at ALL THREE levels."""
+    import sys as _sys
+    _sys.path.insert(0, SRC)
+    from repro.core.topology import Topology, tune_topology
+    topo = Topology.from_spec("2x2x2")
+    dec, _ = tune_topology(topo, ms=tuple(1024 * 16 ** i for i in range(4)))
+    art = str(tmp_path / "hier3.json")
+    dec.save(art)
+    r = _run(["repro.launch.train", "--arch", "smollm-135m", "--reduced",
+              "--steps", "2", "--seq", "64", "--batch", "8",
+              "--topology", "2x2x2", "--tuning-table", art, "--explain"],
+             xla_devices=8)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "topology: cross_pod(2) > intra_pod(2) > intra_host(2)" \
+        in r.stdout
+    assert "hierarchical, levels=['intra_host', 'intra_pod', " \
+        "'cross_pod']" in r.stdout
+    assert "'dcn': 2" in r.stdout and "'pod': 2" in r.stdout
+    # the rendered gradient plan reaches every level of the hierarchy
+    for level in ("level=intra_host", "level=intra_pod",
+                  "level=cross_pod"):
+        assert level in r.stdout
+    assert "step    1" in r.stdout

@@ -116,3 +116,122 @@ def test_moe_dispatch_capacity_and_conservation(T, k, E, seed):
 def test_pad_vocab_properties(v):
     vp = pad_vocab(v)
     assert vp >= v and vp % 256 == 0 and vp - v < 256
+
+
+# ---------------------------------------------------------------------------
+# N-level hierarchical composition: schedule + layout equal the flat sum
+# ---------------------------------------------------------------------------
+# A numpy mirror of the machine: ranks live on a coordinate grid with one
+# axis per level (innermost first) plus a trailing element axis, and the
+# three collective primitives have their textbook semantics. Walking the
+# PRODUCTION schedule (`padded_allreduce_schedule` — the one both
+# `multilevel_all_reduce` and `Communicator.plan` consume) over this
+# mirror proves the padding / truncation / phase-ordering logic correct
+# for arbitrary level counts and fan-outs; the jax execution itself is
+# pinned to the same schedule byte-for-byte by the 8-device subprocess
+# oracles (validate_hierarchical.py, validate_three_level.py).
+from repro.core.analytical.hierarchy import (          # noqa: E402
+    allreduce_phases,
+    padded_allreduce_schedule,
+)
+
+
+def _np_reduce_scatter(bufs, axis, p):
+    summed = bufs.sum(axis=axis)                       # group sum
+    chunks = np.split(summed, p, axis=-1)              # 1/p shards
+    return np.stack(chunks, axis=axis)                 # rank i -> chunk i
+
+
+def _np_all_reduce(bufs, axis):
+    return np.broadcast_to(bufs.sum(axis=axis, keepdims=True), bufs.shape)
+
+
+def _np_all_gather(bufs, axis, p):
+    chunks = [np.take(bufs, i, axis=axis) for i in range(p)]
+    gathered = np.concatenate(chunks, axis=-1)
+    return np.stack([gathered] * p, axis=axis)
+
+
+@given(st.integers(1, 4), st.data(), st.integers(1, 100),
+       st.integers(0, 10 ** 9))
+@settings(max_examples=60, deadline=None)
+def test_multilevel_allreduce_schedule_equals_flat_sum(n_levels, data,
+                                                       n_elems, seed):
+    sizes = [data.draw(st.sampled_from([2, 3, 4]), label=f"fanout{i}")
+             for i in range(n_levels)]
+    rng = np.random.default_rng(seed)
+    bufs = rng.normal(size=tuple(sizes) + (n_elems,))
+    want = bufs.sum(axis=tuple(range(n_levels)))       # the flat oracle
+
+    for lvl, op, in_elems, out_elems in padded_allreduce_schedule(
+            sizes, n_elems):
+        if op == "reduce_scatter":
+            cur = bufs.shape[-1]
+            assert in_elems >= cur and in_elems % sizes[lvl] == 0
+            if in_elems > cur:                         # pad like the executor
+                pad = [(0, 0)] * (bufs.ndim - 1) + [(0, in_elems - cur)]
+                bufs = np.pad(bufs, pad)
+            bufs = _np_reduce_scatter(bufs, lvl, sizes[lvl])
+            assert bufs.shape[-1] == out_elems
+        elif op == "all_reduce":
+            assert bufs.shape[-1] == in_elems
+            bufs = _np_all_reduce(bufs, lvl)
+        else:
+            assert bufs.shape[-1] == in_elems
+            bufs = _np_all_gather(bufs, lvl, sizes[lvl])
+            bufs = bufs[..., :out_elems]               # truncate like exec
+
+    # every rank holds the exact flat sum at the original length
+    assert bufs.shape[-1] == n_elems
+    np.testing.assert_allclose(
+        bufs, np.broadcast_to(want, bufs.shape), rtol=1e-10, atol=1e-10)
+
+
+@given(st.integers(1, 4), st.data(), st.integers(1, 200))
+@settings(max_examples=60, deadline=None)
+def test_padded_schedule_mirrors_analytic_phases(n_levels, data, n_elems):
+    """The integer schedule and the float cost-model schedule agree on
+    phase ordering and levels; the integer one only ever rounds UP."""
+    sizes = [data.draw(st.sampled_from([2, 3, 4, 8]), label=f"f{i}")
+             for i in range(n_levels)]
+    exact = padded_allreduce_schedule(sizes, n_elems)
+    analytic = allreduce_phases(sizes, float(n_elems))
+    assert [(lvl, op) for lvl, op, _, _ in exact] \
+        == [(lvl, op) for lvl, op, _ in analytic]
+    for (_, op, in_elems, _), (_, _, nbytes) in zip(exact, analytic):
+        assert in_elems >= nbytes - 1e-9               # padding rounds up
+    # the final outward phase lands exactly back on the original length
+    assert exact[-1][3] == n_elems
+
+
+@given(st.sampled_from(["all_reduce", "reduce_scatter", "all_gather",
+                        "all_to_all", "broadcast"]),
+       st.integers(1, 1 << 24), st.sampled_from([2, 4, 8, 16]),
+       st.sampled_from(["float32", "bfloat16", "int8"]),
+       st.sampled_from(["add", "max"]))
+@settings(max_examples=80, deadline=None)
+def test_key3_degradation_matches_rich_key_on_schema2(op, nbytes, p,
+                                                      dtype, reduce_op):
+    """A schema-2 artifact keys on (op, nbytes, axis_size) only: however
+    rich the request, its resolution must equal the bare key3 request's —
+    dtype, reduce_op and axis never perturb the legacy lookup."""
+    from repro.comms import CollectiveRequest, Communicator
+    from repro.core.tuning.decision import DecisionTable, TableMeta
+    from repro.core.tuning.space import Method
+
+    table = DecisionTable({
+        ("all_reduce", 4, 1024): Method("ring", 2),
+        ("all_reduce", 8, 1 << 20): Method("rabenseifner", 4),
+        ("reduce_scatter", 4, 1024): Method("recursive_halving", 1),
+        ("all_gather", 4, 1024): Method("bruck", 1),
+        ("all_to_all", 4, 1024): Method("pairwise", 1),
+        ("broadcast", 4, 1024): Method("binomial", 1),
+    }, meta=TableMeta(tuner="exhaustive"))
+    comm = Communicator.create(artifact=table)
+
+    rich = CollectiveRequest(op, nbytes, axis="data", axis_size=p,
+                             dtype=dtype, reduce_op=reduce_op)
+    k_op, k_nbytes, k_p = rich.key3()
+    assert (k_op, k_nbytes, k_p) == (op, nbytes, p)
+    bare = CollectiveRequest(k_op, k_nbytes, axis_size=k_p)
+    assert comm.spec(rich) == comm.spec(bare)

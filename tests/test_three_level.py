@@ -1,0 +1,309 @@
+"""3-level (host/pod/DCN) gradient sync: per-level probe pair selection,
+probe-synthesized topologies, N-level plan expansion at full depth (the
+explain_gradients level-dropping regression), and the 8-device oracle.
+
+The fast tests drive the mesh-coordinate and planning logic with a fake
+mesh (``.axis_names`` / ``.shape`` / ``.devices`` are all the probe and
+planner touch) and a fake pair timer, so no multi-device runtime is
+needed; the subprocess oracle executes the real thing on 8 simulated
+devices.
+"""
+import math
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+import repro.comms.probe as probe_mod
+from repro.comms import (
+    CollectiveRequest,
+    Communicator,
+    level_probe_pairs,
+    probe_mesh_topology,
+)
+from repro.core.topology import Topology
+from repro.core.topology.decision import HierarchicalDecision
+from repro.core.tuning.decision import DecisionTable
+from repro.core.tuning.space import Method
+
+
+def fake_mesh(dcn=2, pod=2, data=2, model=None):
+    """Mesh stand-in: devices are ints laid out on the coordinate grid
+    (flat id = dcn-major), which is all the probe pair selection reads."""
+    axes, shape = [], []
+    for name, size in (("dcn", dcn), ("pod", pod), ("data", data),
+                       ("model", model)):
+        if size:
+            axes.append(name)
+            shape.append(size)
+    n = math.prod(shape)
+    return SimpleNamespace(axis_names=tuple(axes),
+                           shape=dict(zip(axes, shape)),
+                           devices=np.arange(n).reshape(shape))
+
+
+#: synthetic per-tier fabrics, fastest innermost — the fake timer answers
+#: by which coordinate the pair differs in
+FAKE_FABRIC = {"data": (0.5e-6, 1e-10), "pod": (2e-6, 1e-9),
+               "dcn": (10e-6, 2e-8)}
+
+
+def fake_timer_for(mesh, calls=None):
+    order = list(mesh.axis_names)
+    shape = [mesh.shape[a] for a in order]
+
+    def timer(a, b, m):
+        ca = np.unravel_index(int(a), shape)
+        cb = np.unravel_index(int(b), shape)
+        diff = [ax for ax, i, j in zip(order, ca, cb) if i != j]
+        assert len(diff) == 1, \
+            f"probe pair {a}-{b} differs on {diff}: not a single-tier link"
+        launch, byte_time = FAKE_FABRIC[diff[0]]
+        if calls is not None:
+            calls.append((int(a), int(b), diff[0], m))
+        return launch + byte_time * m
+
+    return timer
+
+
+# ---------------------------------------------------------------------------
+# per-level probe pair selection (satellite: not always (0, 1))
+# ---------------------------------------------------------------------------
+def test_level_probe_pairs_follow_mesh_coordinates():
+    mesh = fake_mesh(dcn=2, pod=2, data=2)
+    pairs = level_probe_pairs(mesh)
+    assert [(name, axis) for name, axis, _, _ in pairs] == [
+        ("intra_host", "data"), ("intra_pod", "pod"),
+        ("cross_pod", "dcn")]
+    by_name = {name: (int(a), int(b)) for name, _, _, (a, b) in pairs}
+    # intra-host: neighbours along the innermost data coordinate
+    assert by_name["intra_host"] == (0, 1)
+    # intra-pod / cross-pod pairs step ONLY their own coordinate — they
+    # are emphatically not the first two devices
+    assert by_name["intra_pod"] == (0, 2)
+    assert by_name["cross_pod"] == (0, 4)
+    sizes = [size for _, _, size, _ in pairs]
+    assert sizes == [2, 2, 2]
+
+
+def test_level_probe_pairs_two_level_and_model_axis():
+    # model axis is not a sync tier: pairs never step it
+    mesh = fake_mesh(dcn=None, pod=2, data=4, model=2)
+    pairs = level_probe_pairs(mesh)
+    assert [(name, axis) for name, axis, _, _ in pairs] == [
+        ("intra_pod", "data"), ("cross_pod", "pod")]
+    by_name = {name: (int(a), int(b)) for name, _, _, (a, b) in pairs}
+    # devices laid out (pod, data, model): data neighbour = +model size,
+    # pod neighbour = +data*model
+    assert by_name["intra_pod"] == (0, 2)
+    assert by_name["cross_pod"] == (0, 8)
+
+
+def test_level_probe_pairs_skip_degenerate_axes():
+    assert level_probe_pairs(None) == []
+    mesh = fake_mesh(dcn=None, pod=None, data=4)
+    [(name, axis, size, _)] = level_probe_pairs(mesh)
+    assert (name, axis, size) == ("intra_pod", "data", 4)
+    # a mesh with no sync axes probes nothing
+    no_sync = SimpleNamespace(axis_names=("model",), shape={"model": 2},
+                              devices=np.arange(2))
+    assert level_probe_pairs(no_sync) == []
+
+
+# ---------------------------------------------------------------------------
+# per-level probing -> Topology (fake timer)
+# ---------------------------------------------------------------------------
+def test_probe_mesh_topology_fits_profiles_on_right_levels():
+    mesh = fake_mesh(dcn=2, pod=2, data=2)
+    calls = []
+    topo = probe_mesh_topology(mesh, timer=fake_timer_for(mesh, calls))
+    assert isinstance(topo, Topology)
+    assert topo.names() == ("intra_host", "intra_pod", "cross_pod")
+    assert [lv.axis for lv in topo.levels] == ["data", "pod", "dcn"]
+    # each level's fitted profile recovers ITS tier's fabric, not the
+    # first pair's
+    for lv, axis in zip(topo.levels, ("data", "pod", "dcn")):
+        launch, byte_time = FAKE_FABRIC[axis]
+        assert lv.profile.byte_time == pytest.approx(byte_time, rel=0.05)
+        assert lv.profile.launch == pytest.approx(launch, rel=0.25)
+    # levels were timed over their own pair only
+    timed_axes = {axis for _, _, axis, _ in calls}
+    assert timed_axes == {"data", "pod", "dcn"}
+    # ordering is strict: each outer tier probed slower than the inner
+    bts = [lv.profile.byte_time for lv in topo.levels]
+    assert bts[0] < bts[1] < bts[2]
+
+
+def test_communicator_create_probe_synthesizes_topology(monkeypatch):
+    """Communicator.create(mesh, probe=True) on a 3-axis mesh runs the
+    per-level probe, keeps the synthesized Topology, and matches
+    multi-backend artifacts against the innermost (intra-host) profile —
+    the fabric the old single-pair probe measured."""
+    mesh = fake_mesh(dcn=2, pod=2, data=2)
+    monkeypatch.setattr(probe_mod, "_time_pair",
+                        lambda a, b, m, trials=3:
+                        fake_timer_for(mesh)(a, b, m))
+    comm = Communicator.create(mesh, probe=True)
+    topo = comm.probed_topology
+    assert topo is not None
+    assert topo.names() == ("intra_host", "intra_pod", "cross_pod")
+    assert comm.probed is topo.inner.profile
+    assert comm.probed.byte_time == pytest.approx(FAKE_FABRIC["data"][1],
+                                                  rel=0.05)
+    # with no explicit topology, the probed one becomes the level map
+    assert comm.topology is topo
+
+
+def test_create_probe_topology_maps_hier_levels(monkeypatch):
+    """The probe-synthesized Topology maps composition axes onto a
+    hierarchical artifact's levels exactly (axis -> probed level name)."""
+    mesh = fake_mesh(dcn=2, pod=2, data=2)
+    monkeypatch.setattr(probe_mod, "_time_pair",
+                        lambda a, b, m, trials=3:
+                        fake_timer_for(mesh)(a, b, m))
+    hier = HierarchicalDecision([
+        ("intra_host", DecisionTable({("reduce_scatter", 2, 1024):
+                                      Method("ring", 1)})),
+        ("intra_pod", DecisionTable({("reduce_scatter", 2, 1024):
+                                     Method("recursive_halving", 1)})),
+        ("cross_pod", DecisionTable({("all_reduce", 2, 1024):
+                                     Method("recursive_doubling", 1)})),
+    ])
+    comm = Communicator.create(mesh, artifact=hier, probe=True)
+    keys = comm._level_keys(("data", "pod", "dcn"))
+    assert keys == ["intra_host", "intra_pod", "cross_pod"]
+
+
+# ---------------------------------------------------------------------------
+# N-level plan expansion at full depth (explain_gradients regression)
+# ---------------------------------------------------------------------------
+def three_level_hier():
+    return HierarchicalDecision([
+        ("intra_host", DecisionTable({
+            ("reduce_scatter", 2, 1024): Method("ring", 1),
+            ("all_gather", 2, 1024): Method("bruck", 1)})),
+        ("intra_pod", DecisionTable({
+            ("reduce_scatter", 2, 1024): Method("recursive_halving", 1),
+            ("all_gather", 2, 1024): Method("ring", 1)})),
+        ("cross_pod", DecisionTable({
+            ("all_reduce", 2, 1024): Method("recursive_doubling", 1)})),
+    ])
+
+
+def test_explain_gradients_renders_all_three_levels():
+    """Regression: the two-axis plan expansion silently dropped every
+    level beyond the second — a 3-tier mesh's plan showed intra_pod and
+    cross_pod only. Every leaf must now expand to the full 5-phase
+    composition touching all three levels."""
+    import jax
+    mesh = fake_mesh(dcn=2, pod=2, data=2, model=1)
+    comm = Communicator.create(mesh, artifact=three_level_hier())
+    tree = {"w": jax.ShapeDtypeStruct((37,), "float32"),
+            "b": jax.ShapeDtypeStruct((5,), "float32")}
+    plan = comm.explain_gradients(tree)
+    assert len(plan.entries) == 5 * 2
+    assert {e.level for e in plan.entries} \
+        == {"intra_host", "intra_pod", "cross_pod"}
+    per_leaf = [e.level for e in plan.entries[:5]]
+    assert per_leaf == ["intra_host", "intra_pod", "cross_pod",
+                        "intra_pod", "intra_host"]
+    ops = [e.request.op for e in plan.entries[:5]]
+    assert ops == ["reduce_scatter", "reduce_scatter", "all_reduce",
+                   "all_gather", "all_gather"]
+    # the rendered depth survives the text path too
+    rendered = plan.render()
+    for name in ("intra_host", "intra_pod", "cross_pod"):
+        assert name in rendered
+
+
+def test_plan_byte_flow_matches_padded_schedule():
+    """The 3-axis all-reduce plan's byte counts are the exact padded
+    schedule (pad to each tier's fan-out inward, truncate outward)."""
+    mesh = fake_mesh(dcn=2, pod=2, data=2, model=1)
+    comm = Communicator.create(mesh, artifact=three_level_hier())
+    req = CollectiveRequest("all_reduce", 37 * 4, axis=("data", "pod",
+                                                        "dcn"),
+                            axis_size=8, dtype="float32")
+    entries = comm.plan(req)
+    assert [e.request.op for e in entries] \
+        == ["reduce_scatter", "reduce_scatter", "all_reduce",
+            "all_gather", "all_gather"]
+    # 37 floats: pad to 38 -> shard 19 -> pad to 20 -> shard 10
+    assert [e.request.nbytes for e in entries] \
+        == [38 * 4, 20 * 4, 10 * 4, 10 * 4, 19 * 4]
+    assert [e.level for e in entries] \
+        == ["intra_host", "intra_pod", "cross_pod", "intra_pod",
+            "intra_host"]
+
+
+def test_partial_composition_maps_outer_axes_to_outer_levels():
+    """A composition that does NOT start at the innermost sync tier must
+    not map positionally: ("pod", "dcn") over a 2-level artifact sends
+    both phases to the cross-pod table, never the ICI-tuned intra_pod
+    one; and with non-canonical level names the composition's outermost
+    phase pins to the artifact's OUTERMOST table (the old -1 default),
+    not a middle one."""
+    mesh = fake_mesh(dcn=2, pod=2, data=2, model=1)
+    two_level = HierarchicalDecision([
+        ("intra_pod", DecisionTable({("all_gather", 2, 1024):
+                                     Method("bruck", 1)})),
+        ("cross_pod", DecisionTable({("all_gather", 2, 1024):
+                                     Method("ring", 1)})),
+    ])
+    comm = Communicator.create(mesh, artifact=two_level)
+    assert comm._level_keys(("pod", "dcn")) == ["cross_pod", "cross_pod"]
+    # the full innermost-first stack still maps positionally
+    assert comm._level_keys(("data", "pod")) == [0, 1]
+
+    odd_names = HierarchicalDecision([
+        ("tier_a", DecisionTable({("all_reduce", 2, 1024):
+                                  Method("ring", 1)})),
+        ("tier_b", DecisionTable({("all_reduce", 2, 1024):
+                                  Method("recursive_halving", 1)})),
+        ("tier_c", DecisionTable({("all_reduce", 2, 1024):
+                                  Method("recursive_doubling", 1)})),
+    ])
+    comm_odd = Communicator.create(mesh, artifact=odd_names)
+    # two-axis composition over a 3-level unnamed artifact: inner stays
+    # positional, outer pins to the outermost table (index 2, not 1)
+    assert comm_odd._level_keys(("data", "pod")) == [0, 2]
+
+
+def test_flat_policy_psum_hops_cover_every_outer_tier():
+    """A non-hierarchical decision on a 3-tier mesh syncs flat on "data"
+    plus one psum per remaining tier — and the plan says so."""
+    import jax
+    from repro.core.tuning.decision import TableMeta
+    mesh = fake_mesh(dcn=2, pod=2, data=2, model=1)
+    table = DecisionTable({("all_reduce", 2, 1024): Method("ring", 2)},
+                          meta=TableMeta(tuner="handmade"))
+    comm = Communicator.create(mesh, artifact=table)
+    plan = comm.explain_gradients(
+        {"w": jax.ShapeDtypeStruct((64,), "float32")})
+    sources = [e.source for e in plan.entries]
+    assert sources == ["table:handmade", "psum", "psum"]
+    psum_axes = [e.request.axis for e in plan.entries[1:]]
+    assert psum_axes == ["pod", "dcn"]
+
+
+# ---------------------------------------------------------------------------
+# oracle validation on 8 simulated devices (subprocess)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_three_level_oracle_8dev():
+    """3-level sync_gradients on the 2x2x2 mesh is bit-identical (within
+    reduction-order tolerance) to the global psum, and explain_gradients
+    equals the recorded per-level lookups at all three levels."""
+    import os
+    import subprocess
+    import sys
+    here = os.path.dirname(__file__)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(here, "..", "src")
+    r = subprocess.run(
+        [sys.executable, os.path.join(here, "helpers",
+                                      "validate_three_level.py")],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, \
+        f"STDOUT:\n{r.stdout[-4000:]}\nERR:\n{r.stderr[-2000:]}"
+    assert "FAILS: 0" in r.stdout

@@ -56,6 +56,11 @@ def test_from_spec_levels_and_naming():
     three = Topology.from_spec("2x16x16")
     assert three.names() == ("intra_host", "intra_pod", "cross_pod")
     assert three.total_size == 512
+    # 3-level default axes are the gradient-sync tiers, innermost first
+    assert [lv.axis for lv in three.levels] == ["data", "pod", "dcn"]
+    # tensor-parallel-innermost topologies opt in explicitly
+    tp = Topology.from_spec("2x16x16", axes=("model", "data", "pod"))
+    assert [lv.axis for lv in tp.levels] == ["model", "data", "pod"]
 
     with pytest.raises(ValueError):
         Topology.from_spec("2x2x2x2")
@@ -123,6 +128,57 @@ def test_tune_topology_one_table_per_level():
     assert outer.meta.profile["byte_time"] \
         == pytest.approx(topo.outer.profile.byte_time)
     assert reports["intra_pod"][0].n_experiments > 0
+
+
+def test_tune_topology_three_levels_three_tables():
+    """The full host/pod/DCN stack tunes one table per tier: inner AND
+    middle tiers cover the scatter/gather phases at their own fan-out,
+    the top tier covers all_reduce at the DCN fan-out — the schema-3
+    artifact round-trips all three named tables."""
+    topo = Topology.from_spec("2x2x4")        # 2 dcn x 2 pods x 4 hosts
+    dec, reports = tune_topology(topo, ms=MS)
+    assert dec.names() == ["intra_host", "intra_pod", "cross_pod"]
+    host = dec.table_for("intra_host")
+    assert {op for (op, p, m) in host.table} \
+        == {"reduce_scatter", "all_gather", "all_reduce"}
+    assert {p for (_, p, _) in host.table} == {4}
+    mid = dec.table_for("intra_pod")
+    assert {op for (op, p, m) in mid.table} \
+        == {"reduce_scatter", "all_gather", "all_reduce"}
+    assert {p for (_, p, _) in mid.table} == {2}
+    top = dec.table_for("cross_pod")
+    assert {op for (op, p, m) in top.table} == {"all_reduce"}
+    assert {p for (_, p, _) in top.table} == {2}
+    assert set(reports) == {"intra_host", "intra_pod", "cross_pod"}
+
+
+def test_three_level_roundtrip_and_decided_methods(tmp_path):
+    """A 3-level decision persists as one schema-3 document with three
+    named tables, and `decided_hierarchical_methods` walks all five
+    phases of the 3-level composition."""
+    topo = Topology.from_spec("2x2x2")
+    dec, _ = tune_topology(topo, ms=MS)
+    path = str(tmp_path / "hier3.json")
+    dec.save(path)
+    with open(path) as f:
+        doc = json.load(f)
+    assert doc["schema"] == 3 and doc["kind"] == "hierarchical"
+    assert [p["name"] for p in doc["profiles"]] \
+        == ["intra_host", "intra_pod", "cross_pod"]
+    loaded = load_decision(path)
+    assert isinstance(loaded, HierarchicalDecision)
+    assert loaded.names() == ["intra_host", "intra_pod", "cross_pod"]
+
+    m = MS[-1]
+    methods = decided_hierarchical_methods(loaded, topo, m)
+    assert set(methods) == {
+        ("intra_host", "reduce_scatter"), ("intra_pod", "reduce_scatter"),
+        ("cross_pod", "all_reduce"), ("intra_pod", "all_gather"),
+        ("intra_host", "all_gather")}
+    # the timed composition under those picks beats the flat XLA baseline
+    t_hier = hierarchical_allreduce_time(topo, methods, m)
+    t_flat = flat_time(topo, "all_reduce", Method("xla", 1), m)
+    assert t_hier < t_flat
 
 
 def test_hierarchical_decision_level_addressing():
@@ -251,6 +307,34 @@ def test_hierarchical_cost_sums_phases():
     assert t_best <= got * (1 + 1e-9)
     assert set(picks) == {(0, "reduce_scatter"), (1, "all_reduce"),
                           (0, "all_gather")}
+
+
+def test_hierarchical_cost_sums_three_level_phases():
+    """N-level cost: reduce-scatter at both inner tiers (bytes shrinking
+    by each fan-out), all-reduce at the top, all-gather back down — five
+    phases, each costed under its own level's model."""
+    host = Hockney(alpha=DEFAULT_HOCKNEY.alpha / 2,
+                   beta=DEFAULT_HOCKNEY.beta / 2)
+    pod = DEFAULT_HOCKNEY
+    dcn = Hockney(alpha=8e-6, beta=DEFAULT_HOCKNEY.beta * 20)
+    levels = [(2, host), (4, pod), (2, dcn)]
+    m = float(1 << 20)
+    methods = {(0, "reduce_scatter"): ("ring", 1),
+               (1, "reduce_scatter"): ("ring", 1),
+               (2, "all_reduce"): ("recursive_doubling", 1),
+               (1, "all_gather"): ("ring", 1),
+               (0, "all_gather"): ("ring", 1)}
+    got = hierarchical_allreduce_cost(levels, m, methods)
+    want = (collective_cost("reduce_scatter", "ring", host, 2, m)
+            + collective_cost("reduce_scatter", "ring", pod, 4, m / 2)
+            + collective_cost("all_reduce", "recursive_doubling", dcn, 2,
+                              m / 8)
+            + collective_cost("all_gather", "ring", pod, 4, m / 8)
+            + collective_cost("all_gather", "ring", host, 2, m / 2))
+    assert got == pytest.approx(want)
+    t_best, picks = best_hierarchical(levels, m)
+    assert t_best <= got * (1 + 1e-9)
+    assert set(picks) == set(methods)
 
 
 def test_model_predicts_hierarchy_wins_on_slow_outer_links():
