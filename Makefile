@@ -7,10 +7,11 @@
 #                 (first run pays cold compiles, ~2 min).
 #   make test   - the full tier-1 suite (~8 min).
 #   make bench  - every benchmark table (CSV to stdout).
-#   make bench-smoke - hierarchy_vs_flat + tuner_budget in reduced-size
-#                 mode (BENCH_SMOKE=1): the perf assertions (tuned-hier
-#                 beats tuned-flat; shared cache beats cold) in seconds,
-#                 for CI.
+#   make bench-smoke - hierarchy_vs_flat + tuner_budget + gradsync_pipeline
+#                 in reduced-size mode (BENCH_SMOKE=1): the perf
+#                 assertions (tuned-hier beats tuned-flat; shared cache
+#                 beats cold; bucketed+pipelined sync beats per-leaf)
+#                 in seconds, for CI.
 PY ?= python
 export JAX_COMPILATION_CACHE_DIR ?= $(CURDIR)/.jax_cache
 export JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS ?= 0
@@ -28,4 +29,4 @@ bench:
 
 bench-smoke:
 	BENCH_SMOKE=1 PYTHONPATH=src:. $(PY) benchmarks/run.py \
-		--only hierarchy_vs_flat tuner_budget
+		--only hierarchy_vs_flat tuner_budget gradsync_pipeline

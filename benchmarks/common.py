@@ -1,12 +1,33 @@
 """Shared benchmark scaffolding. Every table emits CSV rows
-``name,us_per_call,derived``."""
+``name,us_per_call,derived``; ``benchmarks/run.py --json`` additionally
+captures each suite's rows into a ``BENCH_<suite>.json`` snapshot so the
+perf trajectory is recorded in-repo."""
 from __future__ import annotations
 
 import time
+from typing import List, Optional
+
+_captured: Optional[List[dict]] = None
+
+
+def start_capture():
+    """Begin recording rows (run.py --json)."""
+    global _captured
+    _captured = []
+
+
+def end_capture() -> List[dict]:
+    """Stop recording; return the rows captured since start_capture."""
+    global _captured
+    rows, _captured = _captured or [], None
+    return rows
 
 
 def row(name: str, us_per_call: float, derived: str = ""):
     print(f"{name},{us_per_call:.3f},{derived}")
+    if _captured is not None:
+        _captured.append({"name": name, "us_per_call": round(us_per_call, 3),
+                          "derived": derived})
 
 
 def timeit(fn, *args, repeats: int = 5, warmup: int = 1) -> float:

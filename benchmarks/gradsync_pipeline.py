@@ -1,0 +1,124 @@
+"""Bucketed, overlap-pipelined gradient sync vs the per-leaf baseline.
+
+Survey §4.1 (CCTP tiling + pipelining) promises 16-21% from overlapping
+transfers with adjacent work; here the "adjacent work" is the NEXT
+fusion bucket's phase on a DIFFERENT tier. Per (topology, leaf mix) this
+table reports the modeled full-tree sync time of
+
+  * leaf-sequential    — every leaf runs the strictly sequential
+                         hierarchical composition on its own (what
+                         `sync_gradients` shipped before bucketing):
+                         small leaves pay per-collective launch latency
+                         5 phases at a time;
+  * bucketed           — leaves coalesce into tuned fusion buckets
+                         (one collective per bucket), buckets still
+                         sequential;
+  * bucketed+pipelined — the same buckets software-pipelined across the
+                         tiers (`overlapped_allreduce_schedule` over
+                         the exact task DAG the executor walks): tier
+                         i+1 phases hide under tier i.
+
+Leaf mixes cover the shapes that hurt differently: many-small (launch
+bound), transformer-ish (bimodal), few-large (bandwidth bound, where
+bucketing alone cannot help and only the pipeline wins). Topologies are
+swept at 2 levels (pod/DCN) and the full 3-level host/pod/DCN stack.
+Acceptance: bucketed+pipelined <= leaf-sequential everywhere, strictly
+below on the 3-level topology.
+
+CSV rows: ``gradsync/<spec>/<mix>/<strategy>, us, speedup vs
+leaf-sequential``. ``benchmarks/run.py --json`` snapshots the table to
+``BENCH_gradsync.json``.
+"""
+from __future__ import annotations
+
+import os
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks.common import row
+from repro.core.collectives.schedule import coalesce_bytes
+from repro.core.topology import (
+    Topology,
+    pipelined_sync_time,
+    sequential_sync_time,
+    tune_overlap_schedule,
+    tune_topology,
+)
+
+JSON_NAME = "gradsync"
+
+#: BENCH_SMOKE=1 (the `make bench-smoke` CI tier) shrinks the sweep; the
+#: pipelined <= leaf-sequential assertion runs on both tiers
+SMOKE = os.environ.get("BENCH_SMOKE") == "1"
+
+TUNE_MS = tuple(4096 * 4 ** i for i in range(4 if SMOKE else 6))
+
+
+def leaf_mixes():
+    """Per-mix gradient-leaf byte lists (fp32 elements x 4)."""
+    scale = 1 if SMOKE else 4
+    mixes = {
+        # launch-bound: a sea of tiny bias/norm leaves
+        "many-small": [16 << 10] * (40 * scale),
+        # bimodal transformer: big matmuls + small biases interleaved
+        "transformer": ([4 << 20, 64 << 10, 64 << 10, 16 << 10]
+                        * (6 * scale)),
+        # bandwidth-bound: a handful of huge leaves (bucketing alone
+        # cannot fuse anything; only the pipeline helps)
+        "few-large": [32 << 20] * (2 * scale),
+    }
+    return mixes
+
+
+def topologies():
+    """(Topology, spec label) at 2 and 3 levels; labels outermost-first
+    like hierarchy_vs_flat."""
+    inner = 4 if SMOKE else 8
+    two = Topology.two_level(inner, 2)
+    spec3 = f"2x{inner // 2}x2"
+    return [(two, f"2x{inner}", 2),
+            (Topology.from_spec(spec3), spec3, 3)]
+
+
+def run():
+    results = {}
+    for topo, label, n_levels in topologies():
+        decision, _ = tune_topology(topo, ms=TUNE_MS)
+        for mix, leaves in leaf_mixes().items():
+            bucket_bytes, _ = tune_overlap_schedule(
+                topo, decision, leaves, attach=False)
+            buckets = coalesce_bytes(leaves, bucket_bytes)
+            t_leaf = sequential_sync_time(topo, decision, leaves)
+            t_bucket = sequential_sync_time(topo, decision, buckets)
+            t_pipe = pipelined_sync_time(topo, decision, buckets)
+            for strat, t in (("leaf-sequential", t_leaf),
+                             ("bucketed", t_bucket),
+                             ("bucketed+pipelined", t_pipe)):
+                row(f"gradsync/{label}/{mix}/{strat}", t * 1e6,
+                    f"speedup={t_leaf / t:.2f}x;bucket_bytes="
+                    f"{bucket_bytes};buckets={len(buckets)}")
+            results[(label, mix)] = (n_levels, t_leaf, t_bucket, t_pipe)
+
+    for (label, mix), (n_levels, t_leaf, t_bucket, t_pipe) in \
+            results.items():
+        assert t_pipe <= t_leaf, (
+            f"{label}/{mix}: bucketed+pipelined {t_pipe:.6f}s worse than "
+            f"leaf-sequential {t_leaf:.6f}s")
+        assert t_pipe <= t_bucket, (
+            f"{label}/{mix}: pipelining made the bucketed schedule "
+            f"slower ({t_pipe:.6f}s vs {t_bucket:.6f}s)")
+        if n_levels == 3:
+            # the acceptance bar: on the full 3-tier stack the pipeline
+            # must be STRICTLY faster than the shipped per-leaf path
+            assert t_pipe < t_leaf, (
+                f"{label}/{mix}: no pipelining win on 3 levels "
+                f"({t_pipe:.6f}s vs {t_leaf:.6f}s)")
+    return results
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -1,13 +1,19 @@
 """Benchmark driver: one module per survey table/figure/claim.
-Prints ``name,us_per_call,derived`` CSV."""
+Prints ``name,us_per_call,derived`` CSV; ``--json`` additionally writes
+each suite's rows to ``BENCH_<suite>.json`` (a suite may override the
+file stem with a module-level ``JSON_NAME``) so the perf trajectory is
+recorded in-repo."""
 import argparse
+import json
 import sys
 import traceback
 
 from benchmarks import (
     analytical_models,
     collective_algorithms,
+    common,
     decision_tree_pruning,
+    gradsync_pipeline,
     hierarchy_vs_flat,
     kernel_bench,
     method_comparison,
@@ -30,6 +36,7 @@ SUITES = {
     "tuner_budget": tuner_budget,                     # unified pipeline cost
     "hierarchy_vs_flat": hierarchy_vs_flat,           # topology-aware tuning
     "overlap": overlap,                               # §4.1
+    "gradsync_pipeline": gradsync_pipeline,           # §4.1 bucketed sync
     "kernel_bench": kernel_bench,                     # kernels layer
     "roofline_report": roofline_report,               # dry-run artifacts
 }
@@ -38,16 +45,27 @@ SUITES = {
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", choices=sorted(SUITES))
+    ap.add_argument("--json", action="store_true",
+                    help="also write each suite's rows to "
+                         "BENCH_<suite>.json in the current directory")
     args = ap.parse_args()
     names = args.only or list(SUITES)
     print("name,us_per_call,derived")
     failed = []
     for name in names:
+        if args.json:
+            common.start_capture()
         try:
             SUITES[name].run()
         except Exception:
             failed.append(name)
             traceback.print_exc()
+        finally:
+            if args.json:
+                rows = common.end_capture()
+                stem = getattr(SUITES[name], "JSON_NAME", name)
+                with open(f"BENCH_{stem}.json", "w") as f:
+                    json.dump({"suite": name, "rows": rows}, f, indent=1)
     if failed:
         print(f"FAILED suites: {failed}", file=sys.stderr)
         sys.exit(1)

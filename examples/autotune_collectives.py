@@ -108,7 +108,12 @@ if __name__ == "__main__":
     print("\n== per-level tuning on the 3-tier 2x2x2 "
           "(DCN x pods x hosts) topology ==")
     topo3 = Topology.from_spec("2x2x2")
-    hier3, level_reports3 = tune_topology(topo3, ms=MS)
+    # a representative transformer-ish gradient-leaf mix: tuning it
+    # stamps the bucketed overlap schedule (bucket_bytes) into the
+    # artifact, so consumers pipeline tier i+1 under tier i by default
+    leaf_mix = [4 << 20, 64 << 10, 64 << 10, 16 << 10] * 6
+    hier3, level_reports3 = tune_topology(topo3, ms=MS,
+                                          schedule_leaf_bytes=leaf_mix)
     for name, reps in level_reports3.items():
         best = TuningSession.best(reps)
         print(f"  {name:10s} tuner={best.name:12s} "
@@ -119,9 +124,21 @@ if __name__ == "__main__":
     print(f"  {m >> 20} MB all-reduce: 3-level hierarchical "
           f"{t_hier3 * 1e6:.0f} us vs flat XLA {t_xla3 * 1e6:.0f} us "
           f"({t_xla3 / t_hier3:.1f}x)")
+
+    from repro.core.topology import pipelined_sync_time, sequential_sync_time
+    from repro.core.collectives.schedule import coalesce_bytes
+    sched = hier3.levels[0][1].meta.schedule
+    buckets = coalesce_bytes(leaf_mix, sched["bucket_bytes"])
+    t_seq = sequential_sync_time(topo3, hier3, leaf_mix)
+    t_pipe = pipelined_sync_time(topo3, hier3, buckets)
+    print(f"  gradient sync ({len(leaf_mix)} leaves): per-leaf "
+          f"{t_seq * 1e6:.0f} us vs bucketed+pipelined "
+          f"{t_pipe * 1e6:.0f} us ({t_seq / t_pipe:.2f}x, "
+          f"bucket_bytes={sched['bucket_bytes']})")
     hier3.save("hierarchical_decision_3level.json")
     print("3-level artifact -> hierarchical_decision_3level.json "
-          "(use: python -m repro.launch.train --topology 2x2x2 "
+          "(carries the tuned bucket schedule; use: python -m "
+          "repro.launch.train --topology 2x2x2 "
           "--tuning-table hierarchical_decision_3level.json --explain)")
 
     # -- consumption: one Communicator owns probe -> select -> decide -------

@@ -5,6 +5,7 @@ once per launch; every consumer (train steps, serve decode, TP decode,
 MoE all-to-all, benchmarks) dispatches through its op methods and can ask
 `explain()` why any schedule was chosen.
 """
+from repro.comms.bucketing import Bucket, BucketLayout, coalesce_bytes
 from repro.comms.communicator import Communicator
 from repro.comms.probe import (
     level_probe_pairs,

@@ -22,12 +22,14 @@ EXACTLY the lookup path the executing ops use and returns a `PlanReport`
 """
 from __future__ import annotations
 
+import dataclasses
 import math
-from typing import List, Optional, Sequence, Tuple, Union
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import numpy as np
 
+from repro.comms.bucketing import BucketLayout
 from repro.comms.report import PlanEntry, PlanReport
 from repro.comms.request import CollectiveRequest
 from repro.core.analytical.hierarchy import padded_allreduce_schedule
@@ -38,6 +40,10 @@ from repro.core.collectives.hierarchical import (
     multilevel_all_reduce,
     multilevel_reduce_scatter,
     sync_gradients_multilevel,
+)
+from repro.core.collectives.schedule import (
+    build_pipeline_schedule,
+    execute_pipelined,
 )
 #: gradient-sync mesh axes, innermost tier first — a mesh carrying any of
 #: these is data-parallel over them ("data" inside the host/pod, "pod"
@@ -145,6 +151,20 @@ _AXIS_LEVEL = {"model": "intra_host", "data": "intra_pod",
                "pod": "cross_pod", "dcn": "cross_pod"}
 
 
+def _meta_schedule(policy) -> Optional[dict]:
+    """The tuned gradient-sync schedule an artifact carries (innermost
+    table wins for hierarchical artifacts), or None — pre-schedule
+    artifacts keep the sequential per-leaf path."""
+    if policy.kind == "table":
+        meta = policy.table.meta
+        return meta.schedule if meta else None
+    if policy.kind == "hier":
+        for _, table in policy.hier.levels:
+            if table.meta is not None and table.meta.schedule:
+                return table.meta.schedule
+    return None
+
+
 class _HierPolicy:
     """A `HierarchicalDecision`: one table per topology level. A flat
     request answers from the level that carries its mesh axis (a 3-level
@@ -241,7 +261,8 @@ class Communicator:
     def __init__(self, mesh=None, *, policy=None, topology=None,
                  probed=None, probed_topology=None,
                  a2a_algorithm: str = "xla",
-                 artifact_path: Optional[str] = None):
+                 artifact_path: Optional[str] = None,
+                 bucket_bytes: int = 0):
         self.mesh = mesh
         self.topology = topology
         self.probed = probed
@@ -249,18 +270,30 @@ class Communicator:
         self._policy = policy or _XlaPolicy()
         self._a2a = a2a_algorithm or "xla"
         self.artifact_path = artifact_path
+        #: fusion-bucket budget for `sync_gradients` (0 = per-leaf path);
+        #: resolved from the artifact's tuned schedule by `create`, or
+        #: forced by the caller (--bucket-mb)
+        self.bucket_bytes = int(bucket_bytes or 0)
         axes = set(mesh.axis_names) if mesh is not None else set()
         #: gradient-sync axes present on the mesh, innermost tier first
         self._sync_axes: Tuple[str, ...] = tuple(
             a for a in SYNC_AXES if a in axes)
         self._inner_axis = "data" if "data" in axes else None
+        # decision-resolution caches: a 200-leaf tree re-traces the same
+        # handful of (op, nbytes, dtype, axes) requests hundreds of times
+        # per step trace; the policy lookup (table decide + level-key
+        # mapping) is pure given the frozen policy, so memoize it
+        self._plan_cache: Dict[CollectiveRequest, PlanEntry] = {}
+        self._level_spec_cache: Dict[Tuple, CollectiveSpec] = {}
+        self._level_keys_cache: Dict[Tuple[str, ...], List] = {}
 
     # -- construction -------------------------------------------------------
     @classmethod
     def create(cls, mesh=None, *, topology=None, artifact=None,
                probe: bool = False, static: Optional[CollectiveSpec] = None,
                algorithm: str = "xla", segment_bytes: int = 0,
-               a2a_algorithm: str = "xla", probed=None) -> "Communicator":
+               a2a_algorithm: str = "xla", probed=None,
+               bucket_bytes: Optional[int] = None) -> "Communicator":
         """Resolve the full decision stack once.
 
         artifact      a schema-2/3 artifact path or an already-loaded
@@ -280,7 +313,12 @@ class Communicator:
         static        a fixed CollectiveSpec for every request;
         algorithm / segment_bytes
                       config-style static policy: fixed algorithm, segment
-                      count derived per message as ceil(nbytes/segment_bytes).
+                      count derived per message as ceil(nbytes/segment_bytes);
+        bucket_bytes  fusion-bucket budget for the bucketed,
+                      overlap-pipelined `sync_gradients`. None (default)
+                      adopts the artifact's tuned schedule when it
+                      carries one; an explicit int forces it (0 disables
+                      — the sequential per-leaf path).
         """
         from repro.core.topology.decision import (
             HierarchicalDecision,
@@ -341,9 +379,14 @@ class Communicator:
             policy = _StaticPolicy(algorithm, segment_bytes)
         else:
             policy = _XlaPolicy()
+        if bucket_bytes is None:
+            sched = _meta_schedule(policy)
+            bucket_bytes = int(sched.get("bucket_bytes", 0)) if sched \
+                else 0
         return cls(mesh, policy=policy, topology=topology, probed=probed,
                    probed_topology=probed_topology,
-                   a2a_algorithm=a2a_algorithm, artifact_path=path)
+                   a2a_algorithm=a2a_algorithm, artifact_path=path,
+                   bucket_bytes=bucket_bytes)
 
     @classmethod
     def from_config(cls, coll, mesh=None, *, topology=None,
@@ -353,14 +396,16 @@ class Communicator:
             mesh, topology=topology, artifact=coll.decision, probe=probe,
             probed=probed, algorithm=coll.algorithm,
             segment_bytes=coll.segment_bytes,
-            a2a_algorithm=coll.a2a_algorithm)
+            a2a_algorithm=coll.a2a_algorithm,
+            bucket_bytes=coll.bucket_bytes)
 
     # -- introspection ------------------------------------------------------
     @property
     def is_tuned(self) -> bool:
-        """True when gradient sync must run the explicit shard_map path
-        (any non-XLA decision source)."""
-        return self._policy.kind != "xla"
+        """True when gradient sync must run the explicit shard_map path:
+        any non-XLA decision source, or a fusion-bucket budget (bucketed
+        sync fuses leaves even under the XLA lowering)."""
+        return self._policy.kind != "xla" or bool(self.bucket_bytes)
 
     @property
     def hierarchical(self) -> bool:
@@ -373,17 +418,26 @@ class Communicator:
         d = self._policy.describe()
         if self._a2a != "xla":
             d += f", a2a={self._a2a}"
+        if self.bucket_bytes:
+            d += f", bucket_bytes={self.bucket_bytes}"
         return d
 
     # -- decision resolution ------------------------------------------------
     def _resolve(self, req: CollectiveRequest) -> PlanEntry:
-        """One flat request -> the entry that will execute."""
+        """One flat request -> the entry that will execute (memoized: the
+        policy is frozen, so resolution is pure in the request)."""
+        hit = self._plan_cache.get(req)
+        if hit is not None:
+            return hit
         if req.op == "all_to_all" and self._a2a != "xla":
             # an explicit a2a algorithm (CLI / config) overrides the table:
             # the user pinned the MoE dispatch schedule deliberately
-            return PlanEntry(req, CollectiveSpec(self._a2a, 1),
-                             source="static:a2a")
-        return self._policy.resolve(req)
+            entry = PlanEntry(req, CollectiveSpec(self._a2a, 1),
+                              source="static:a2a")
+        else:
+            entry = self._policy.resolve(req)
+        self._plan_cache[req] = entry
+        return entry
 
     def spec(self, req: CollectiveRequest) -> CollectiveSpec:
         """The {algorithm, segments} this communicator executes for a flat
@@ -398,7 +452,12 @@ class Communicator:
 
     def spec_for_level(self, level, op: str, nbytes: int, axis_size: int
                        ) -> CollectiveSpec:
-        return self._policy.level_spec(level, op, nbytes, axis_size)
+        key = (level, op, int(nbytes), int(axis_size))
+        hit = self._level_spec_cache.get(key)
+        if hit is None:
+            hit = self._policy.level_spec(level, op, nbytes, axis_size)
+            self._level_spec_cache[key] = hit
+        return hit
 
     # -- planning / explainability ------------------------------------------
     def _axis_sizes(self, axes: Sequence[str]) -> List[int]:
@@ -409,10 +468,15 @@ class Communicator:
     def _level_keys(self, axes: Sequence[str]) -> List:
         """The decision-level address each composition axis dispatches
         against (innermost first); flat policies answer every level, so
-        positional indices suffice there."""
-        if self._policy.kind == "hier":
-            return self._policy.level_keys(axes)
-        return list(range(len(axes)))
+        positional indices suffice there. Memoized per axes tuple (the
+        mapping walks the topology; per-leaf re-derivation is waste)."""
+        key = tuple(axes)
+        hit = self._level_keys_cache.get(key)
+        if hit is None:
+            hit = self._policy.level_keys(axes) \
+                if self._policy.kind == "hier" else list(range(len(axes)))
+            self._level_keys_cache[key] = hit
+        return list(hit)
 
     def _composition_entries(self, req: CollectiveRequest
                              ) -> List[PlanEntry]:
@@ -491,21 +555,83 @@ class Communicator:
                 dtype=np.dtype(leaf.dtype).name))
         return out
 
-    def explain_gradients(self, tree) -> PlanReport:
-        """Per-leaf gradient-sync plan: the full composition's phases at
-        EVERY level of a hierarchical decision, or the flat tuned
-        all-reduce plus one psum hop per remaining sync tier."""
-        entries: List[PlanEntry] = []
-        for req in self.gradient_requests(tree):
-            entries.extend(self.plan(req))
-            if not req.hierarchical:
+    # -- bucketed, overlap-pipelined gradient sync --------------------------
+    def _bucket_plan(self, tree, bucket_bytes: int):
+        """The shared layout + pipeline schedule behind the bucketed
+        `sync_gradients` AND `explain_gradients`: fusion buckets over
+        the tree, one ``padded_allreduce_schedule`` phase chain per
+        bucket, software-pipelined across the sync tiers. Returns
+        ``(layout, active, schedule, axes, sizes, keys, hier)`` where
+        ``active`` indexes the non-empty buckets the schedule covers."""
+        layout = BucketLayout.plan(tree, bucket_bytes)
+        active = [i for i, b in enumerate(layout.buckets) if b.elems]
+        hier = self.hierarchical and len(self._sync_axes) > 1
+        axes = tuple(self._sync_axes) if hier else (self._inner_axis,)
+        sizes = self._axis_sizes(axes)
+        keys = self._level_keys(axes)
+        sched = build_pipeline_schedule(
+            [layout.buckets[i].elems for i in active], sizes)
+        return layout, active, sched, axes, sizes, keys, hier
+
+    def _resolve_bucket_bytes(self, bucket_bytes: Optional[int]) -> int:
+        return self.bucket_bytes if bucket_bytes is None \
+            else int(bucket_bytes)
+
+    def explain_gradients(self, tree, *,
+                          bucket_bytes: Optional[int] = None) -> PlanReport:
+        """The gradient-sync plan, exactly as it will execute.
+
+        Without bucketing (no tuned schedule in the artifact and no
+        override): per leaf, the full composition's phases at EVERY
+        level of a hierarchical decision, or the flat tuned all-reduce
+        plus one psum hop per remaining sync tier. With bucketing: the
+        pipelined schedule's entries in ISSUE order — bucket k's inward
+        phase between bucket k-1's deeper phases — each tagged with its
+        fusion bucket and pipeline step."""
+        bb = self._resolve_bucket_bytes(bucket_bytes)
+        if not bb:
+            entries: List[PlanEntry] = []
+            for req in self.gradient_requests(tree):
+                entries.extend(self.plan(req))
+                if not req.hierarchical:
+                    for outer in self._sync_axes[1:]:
+                        psum_req = CollectiveRequest(
+                            "all_reduce", req.nbytes, axis=outer,
+                            axis_size=self.mesh.shape[outer],
+                            dtype=req.dtype)
+                        entries.append(PlanEntry(psum_req, _XLA_SPEC,
+                                                 source="psum"))
+            return PlanReport(entries)
+
+        if self._inner_axis is None:
+            raise ValueError("sync_gradients needs a mesh with a 'data' "
+                             "axis")
+        layout, active, sched, axes, sizes, keys, hier = \
+            self._bucket_plan(tree, bb)
+        entries = []
+        for t in sched.tasks:
+            bucket = layout.buckets[active[t.bucket]]
+            itemsize = np.dtype(bucket.dtype).itemsize
+            key = keys[t.level]
+            req = CollectiveRequest(
+                t.op, t.in_elems * itemsize, axis=axes[t.level],
+                axis_size=sizes[t.level], dtype=bucket.dtype,
+                level=key if self._policy.kind == "hier" else None)
+            entry = self._level_entry(req, key)
+            entries.append(dataclasses.replace(
+                entry, bucket=active[t.bucket], step=t.step))
+        if not hier:
+            # the flat path tops each bucket with one psum per remaining
+            # sync tier, after its pipeline chain drains
+            for bi in active:
+                bucket = layout.buckets[bi]
                 for outer in self._sync_axes[1:]:
-                    psum_req = CollectiveRequest(
-                        "all_reduce", req.nbytes, axis=outer,
+                    req = CollectiveRequest(
+                        "all_reduce", bucket.nbytes, axis=outer,
                         axis_size=self.mesh.shape[outer],
-                        dtype=req.dtype)
-                    entries.append(PlanEntry(psum_req, _XLA_SPEC,
-                                             source="psum"))
+                        dtype=bucket.dtype)
+                    entries.append(PlanEntry(req, _XLA_SPEC, source="psum",
+                                             bucket=bi))
         return PlanReport(entries)
 
     # -- dispatch -----------------------------------------------------------
@@ -585,18 +711,35 @@ class Communicator:
                                            axis_size=axis_size)).algorithm
 
     # -- tree-level gradient sync -------------------------------------------
-    def sync_gradients(self, grads, *, mean: bool = True):
+    def sync_gradients(self, grads, *, mean: bool = True,
+                       bucket_bytes: Optional[int] = None):
         """All-reduce every gradient leaf with its tuned algorithm,
         picking the schedule the communicator resolved to: the full
         N-level composition on a multi-tier mesh with a hierarchical
         artifact, otherwise the flat tuned sync with a plain psum per
         remaining tier on top. Must be called inside shard_map (manual
-        over the sync axes)."""
+        over the sync axes).
+
+        With a fusion-bucket budget (``bucket_bytes`` here, the
+        artifact's tuned schedule, or --bucket-mb), the tree is
+        coalesced into dtype-homogeneous buckets — one tuned collective
+        per bucket instead of one per leaf — and the buckets
+        software-pipeline through the tiers (`execute_pipelined` over
+        the same schedule `explain_gradients` renders). Per bucket the
+        phase order matches the sequential composition exactly, so the
+        result is bit-identical to syncing each bucket alone; vs the
+        per-leaf path only the fusion boundaries (hence float reduction
+        order) differ."""
         if self._inner_axis is None:
             raise ValueError("sync_gradients needs a mesh with a 'data' "
                              "axis")
         denom = self._data_parallel_size()
         inner = self._inner_axis
+
+        bb = self._resolve_bucket_bytes(bucket_bytes)
+        if bb:
+            return self._sync_gradients_bucketed(grads, bb, mean=mean,
+                                                 denom=denom)
 
         if self.hierarchical and len(self._sync_axes) > 1:
             return sync_gradients_multilevel(
@@ -612,3 +755,24 @@ class Communicator:
             return out
 
         return jax.tree.map(sync_leaf, grads)
+
+    def _sync_gradients_bucketed(self, grads, bucket_bytes: int, *,
+                                 mean: bool, denom: int):
+        """The bucketed, overlap-pipelined sync: flatten -> pipelined
+        per-bucket composition -> (psum top for flat policies) ->
+        unflatten bit-identically."""
+        layout, active, sched, axes, sizes, keys, hier = \
+            self._bucket_plan(grads, bucket_bytes)
+        flats = layout.flatten(grads)
+        if active:
+            out = execute_pipelined(
+                [flats[i] for i in active], sched,
+                list(zip(axes, sizes)), self, level_keys=keys)
+            if not hier:
+                for outer in self._sync_axes[1:]:
+                    out = [jax.lax.psum(f, outer) for f in out]
+            if mean:
+                out = [f / denom for f in out]
+            for i, f in zip(active, out):
+                flats[i] = f
+        return layout.unflatten(flats)

@@ -18,19 +18,28 @@ from repro.comms.request import CollectiveRequest
 
 @dataclasses.dataclass(frozen=True)
 class PlanEntry:
-    """One resolved dispatch decision: what executes, and why."""
+    """One resolved dispatch decision: what executes, and why.
+
+    ``bucket``/``step`` are set only by the bucketed overlap-pipelined
+    gradient sync: which fusion bucket the entry belongs to, and the
+    pipeline step it issues in (entries of the same step run on
+    different tiers concurrently)."""
 
     request: CollectiveRequest
     spec: CollectiveSpec
     level: Optional[str] = None   # topology level name, hierarchical only
     source: str = "xla"           # "xla" | "static" | "table:<name>" | ...
+    bucket: Optional[int] = None  # fusion-bucket index (pipelined sync)
+    step: Optional[int] = None    # pipeline step (pipelined sync)
 
     def render(self) -> str:
         lvl = f" level={self.level}" if self.level else ""
+        pipe = f" bucket={self.bucket} step={self.step}" \
+            if self.bucket is not None else ""
         return (f"{self.request.op:14s} {self.request.nbytes:>10d} B "
                 f"p={self.request.axis_size:<4d}-> "
                 f"{self.spec.algorithm} segments={self.spec.segments}"
-                f"{lvl} [{self.source}]")
+                f"{lvl}{pipe} [{self.source}]")
 
 
 @dataclasses.dataclass
@@ -58,4 +67,5 @@ class PlanReport:
             "axis_size": e.request.axis_size, "dtype": e.request.dtype,
             "algorithm": e.spec.algorithm, "segments": e.spec.segments,
             "level": e.level, "source": e.source,
+            "bucket": e.bucket, "step": e.step,
         } for e in self.entries]

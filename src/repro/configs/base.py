@@ -155,6 +155,11 @@ class CollectiveConfig:
     decision: Optional[Union[str, "DecisionTable"]] = None
     a2a_algorithm: str = "xla"     # MoE expert-dispatch all-to-all algorithm
     overlap_microbatches: int = 1  # >1 enables comm/compute overlap (§4.1)
+    bucket_bytes: Optional[int] = None  # fusion-bucket budget for the
+    # bucketed, overlap-pipelined gradient sync; None = adopt the
+    # artifact's tuned schedule (sequential per-leaf when it carries
+    # none), 0 = force the per-leaf path even over a schedule-carrying
+    # artifact
 
 
 @dataclass(frozen=True)

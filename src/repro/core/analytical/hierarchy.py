@@ -134,6 +134,93 @@ def _compose(levels, m, methods, gamma):
     return total, picks
 
 
+# ---------------------------------------------------------------------------
+# overlap-pipelined schedules (survey §4.1, CCTP tiling + pipelining)
+# ---------------------------------------------------------------------------
+def overlapped_allreduce_schedule(
+    sizes: Sequence[int],
+    bucket_elems: Sequence[int],
+    phase_cost,
+):
+    """Timed walk of the bucketed pipeline: ``(makespan_seconds, timed)``.
+
+    ``sizes`` are the per-tier fan-outs (innermost first),
+    ``bucket_elems`` the fusion-bucket element counts, and
+    ``phase_cost(level, op, in_elems) -> (seconds, n_segments)`` prices
+    one tier phase under that tier's communication model (a simulator,
+    `collective_cost`, or live measurements) and reports its tuned
+    segment count.
+
+    The tasks come from the SAME ``build_pipeline_schedule`` the
+    executor and the plan renderer walk; timing obeys the DAG at
+    SEGMENT granularity: each tier is one serial wire, a phase's tuned
+    segments occupy it back to back, and segment s of phase p may start
+    only once the segment of phase p-1 covering the same data fraction
+    has finished. The makespan is therefore pipeline fill plus a steady
+    state paced by the busiest tier chain — ``max`` over tiers of
+    per-bucket occupancy — instead of the sequential sum of phases.
+
+    ``timed`` is ``[(task, start, finish)]`` in issue order; the
+    makespan of a single bucket degenerates to the sequential
+    sum-of-phases (`hierarchical_allreduce_cost`'s convention).
+    """
+    from repro.core.collectives.schedule import build_pipeline_schedule
+
+    sched = build_pipeline_schedule(bucket_elems, sizes)
+    wire_free = [0.0] * len(sizes)            # one serial wire per tier
+    seg_finish: Dict[Tuple[int, int], List[float]] = {}
+    timed = []
+    for t in sched.tasks:
+        total, nseg = phase_cost(t.level, t.op, t.in_elems)
+        nseg = max(1, int(nseg))
+        d = total / nseg
+        prev = seg_finish.get((t.bucket, t.phase - 1))
+        free = wire_free[t.level]
+        finishes: List[float] = []
+        start0 = None
+        for s in range(nseg):
+            ready = 0.0
+            if prev is not None:
+                # the predecessor segment covering this segment's data
+                idx = min(len(prev) - 1, ((s + 1) * len(prev) - 1) // nseg)
+                ready = prev[idx]
+            start = max(free, ready)
+            if start0 is None:
+                start0 = start
+            free = start + d
+            finishes.append(free)
+        wire_free[t.level] = free
+        seg_finish[(t.bucket, t.phase)] = finishes
+        timed.append((t, start0 or 0.0, free))
+    makespan = max((fin for _, _, fin in timed), default=0.0)
+    return makespan, timed
+
+
+def overlapped_allreduce_time(
+    levels: Sequence[Tuple[int, CommModel]],
+    bucket_bytes: Sequence[float],
+    methods: Optional[Dict[Tuple[int, str], Tuple[str, int]]] = None,
+    *,
+    gamma: float = VPU_GAMMA,
+) -> float:
+    """Predicted makespan of the bucketed, overlap-pipelined all-reduce
+    under the per-level communication models — the pipelined counterpart
+    of `hierarchical_allreduce_cost`. ``methods`` maps (level, op) ->
+    (algorithm, segments); omitted entries use the per-level
+    model-optimal pick."""
+    sizes = [p for p, _ in levels]
+
+    def phase_cost(level, op, nbytes):
+        p, model = levels[level]
+        t, (_, segs) = _phase(op, model, p, float(nbytes),
+                              (methods or {}).get((level, op)), gamma)
+        return t, segs
+
+    return overlapped_allreduce_schedule(sizes, [int(b) for b in
+                                                 bucket_bytes],
+                                         phase_cost)[0]
+
+
 def flat_vs_hierarchical(
     flat_model: CommModel,
     levels: Sequence[Tuple[int, CommModel]],

@@ -1,0 +1,209 @@
+"""Segment-level pipelined schedules for bucketed multi-tier gradient sync.
+
+``multilevel_all_reduce`` runs its N tier phases strictly sequentially:
+the DCN links idle while the ICI reduce-scatters, and vice versa. The
+survey's §4.1 (CCTP tiling + pipelining) and HiCCL's striped multi-level
+pipelines both hide tier i+1 under tier i by splitting the work into
+tiles that flow through the tiers like a software pipeline. This module
+is that schedule, made explicit:
+
+  * the gradient tree is coalesced into fusion BUCKETS (one tuned
+    collective per bucket instead of one per leaf — ``coalesce_bytes``
+    is the shared greedy packing rule, ``repro.comms.bucketing`` the
+    tree-aware layout built on it);
+  * each bucket walks the same ``padded_allreduce_schedule`` phase list
+    the sequential composition executes, but the phases of DIFFERENT
+    buckets overlap: bucket k's tier-0 reduce-scatter issues while
+    bucket k-1 runs its tier-1 phase, and the all-gathers drain back in
+    reverse;
+  * the dependencies are an explicit DAG over `SegmentTask`s —
+    ``(k, p) <- (k, p-1)`` is the data edge (a bucket's phases are
+    sequential), ``(k, p) <- (k-1, p)`` the wire edge (a tier's links
+    carry one bucket's phase at a time) — and the pipeline step of every
+    task is the DAG's longest path, ``step = bucket + phase``.
+
+``build_pipeline_schedule`` is the single source of the task order: the
+executor (`execute_pipelined`) walks it to issue collectives, the plan
+renderer (`Communicator.explain_gradients`) walks it to print the
+schedule, and the cost model
+(`repro.core.analytical.hierarchy.overlapped_allreduce_schedule`) walks
+it to predict the makespan — plan == executed == modeled by
+construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.analytical.hierarchy import padded_allreduce_schedule
+from repro.core.collectives.dispatch import apply_collective
+
+
+def pack_buckets(leaves: Sequence[Tuple[int, str]], bucket_bytes: int
+                 ) -> List[Tuple[str, List[int]]]:
+    """THE greedy fusion-bucket packing rule, shared by the executing
+    layout (`repro.comms.bucketing.BucketLayout`) and the cost model
+    (`coalesce_bytes`), so the schedule that gets priced is the schedule
+    that runs.
+
+    ``leaves`` are (nbytes, dtype) in tree order. Buckets are
+    dtype-homogeneous: each dtype keeps its own open bucket, a leaf
+    joins it unless that would push past ``bucket_bytes`` (then the
+    bucket closes and a fresh one opens). A leaf larger than the budget
+    gets a bucket of its own (leaves are never split — unflattening
+    must stay exact); zero-byte leaves slot into the open bucket
+    without contributing bytes. ``bucket_bytes <= 0`` fuses everything
+    (per dtype) into one bucket. Returns ``(dtype, leaf indices)`` per
+    bucket, in bucket-open order."""
+    open_by_dtype = {}
+    buckets: List[List] = []              # [dtype, [leaf indices], bytes]
+    for i, (nbytes, dtype) in enumerate(leaves):
+        nbytes = int(nbytes)
+        bi = open_by_dtype.get(dtype)
+        if bi is not None and nbytes and bucket_bytes > 0 \
+                and buckets[bi][2] + nbytes > bucket_bytes:
+            bi = None                     # budget exceeded: close it
+        if bi is None:
+            buckets.append([dtype, [], 0])
+            bi = len(buckets) - 1
+            open_by_dtype[dtype] = bi
+        buckets[bi][1].append(i)
+        buckets[bi][2] += nbytes
+    return [(dt, idxs) for dt, idxs, _ in buckets]
+
+
+def coalesce_bytes(leaf_nbytes: Sequence[int], bucket_bytes: int,
+                   dtypes: Optional[Sequence[str]] = None) -> List[int]:
+    """Per-bucket byte counts for a leaf mix — `pack_buckets` with the
+    empty buckets dropped (they never reach the wire). ``dtypes`` prices
+    a mixed-dtype tree exactly as the execution layout will split it;
+    omitted, all leaves share one stream (a homogeneous fp32 mix)."""
+    if dtypes is None:
+        dtypes = ["="] * len(leaf_nbytes)
+    sizes = [int(n) for n in leaf_nbytes]
+    out = []
+    for _, idxs in pack_buckets(list(zip(sizes, dtypes)), bucket_bytes):
+        total = sum(sizes[i] for i in idxs)
+        if total:
+            out.append(total)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentTask:
+    """One tier phase of one bucket — the schedulable unit. The task's
+    tuned segment count (resolved per level at dispatch) further splits
+    it into wire segments; ``deps`` are (bucket, phase) edges."""
+
+    bucket: int
+    phase: int              # index into the bucket's phase list
+    level: int              # tier index, innermost first
+    op: str                 # reduce_scatter | all_reduce | all_gather
+    in_elems: int           # elements entering the phase (padded)
+    out_elems: int          # elements the phase leaves behind
+    step: int               # pipeline step (longest path in the DAG)
+    deps: Tuple[Tuple[int, int], ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineSchedule:
+    """The issue-ordered task list plus its shape. ``tasks`` are sorted
+    by (step, bucket): within a pipeline step the draining buckets (the
+    ones deepest into the composition) issue first."""
+
+    sizes: Tuple[int, ...]          # per-tier fan-outs, innermost first
+    bucket_elems: Tuple[int, ...]
+    tasks: Tuple[SegmentTask, ...]
+
+    @property
+    def n_phases(self) -> int:
+        return 2 * len(self.sizes) - 1
+
+    @property
+    def n_steps(self) -> int:
+        return 1 + max((t.step for t in self.tasks), default=-1)
+
+    def render(self, indent: str = "  ") -> str:
+        """The pipeline as a step-by-step diagram (one line per task in
+        issue order)."""
+        lines = []
+        for t in self.tasks:
+            lines.append(
+                f"{indent}step {t.step:3d}  bucket {t.bucket:3d}  "
+                f"tier {t.level}  {t.op:14s} {t.in_elems:>10d} elems")
+        return "\n".join(lines)
+
+
+def build_pipeline_schedule(bucket_elems: Sequence[int],
+                            sizes: Sequence[int]) -> PipelineSchedule:
+    """The pipelined schedule for ``bucket_elems`` fusion buckets over
+    tiers of fan-out ``sizes`` (innermost first).
+
+    Every bucket's phase list is EXACTLY ``padded_allreduce_schedule`` —
+    the sequential composition's byte flow — so per bucket the executed
+    numerics are unchanged; only the interleaving across buckets is new.
+    One tier degenerates to the bucket-sequential schedule (no overlap
+    to exploit, but still one fused collective per bucket).
+    """
+    assert sizes, "need at least one tier"
+    tasks: List[SegmentTask] = []
+    for k, elems in enumerate(bucket_elems):
+        for p_idx, (lvl, op, in_e, out_e) in enumerate(
+                padded_allreduce_schedule(list(sizes), int(elems))):
+            deps: List[Tuple[int, int]] = []
+            if p_idx:
+                deps.append((k, p_idx - 1))   # data: my previous phase
+            if k:
+                deps.append((k - 1, p_idx))   # wire: tier busy until then
+            tasks.append(SegmentTask(
+                bucket=k, phase=p_idx, level=lvl, op=op, in_elems=in_e,
+                out_elems=out_e, step=k + p_idx, deps=tuple(deps)))
+    tasks.sort(key=lambda t: (t.step, t.bucket))
+    return PipelineSchedule(tuple(int(s) for s in sizes),
+                            tuple(int(e) for e in bucket_elems),
+                            tuple(tasks))
+
+
+def execute_pipelined(
+    buckets,
+    schedule: PipelineSchedule,
+    levels: Sequence[Tuple[str, int]],
+    decision=None,
+    *,
+    op: str = "add",
+    level_keys: Optional[Sequence] = None,
+):
+    """Run the pipelined schedule over flat fusion buffers, inside
+    shard_map (manual over every tier's axis).
+
+    ``buckets`` are 1-D arrays (one per schedule bucket, matching
+    ``schedule.bucket_elems``); ``levels`` are (axis, size) innermost
+    first; ``decision`` / ``level_keys`` address per-level specs exactly
+    as ``multilevel_all_reduce`` does. Collectives are issued in the
+    schedule's pipeline order — bucket k's inward phase between bucket
+    k-1's deeper phases — so XLA's latency-hiding scheduler sees the
+    independent chains the DAG exposes. Per bucket the phase order (and
+    therefore every floating-point value) is identical to the
+    sequential ``multilevel_all_reduce`` of that bucket.
+    """
+    from repro.core.collectives.hierarchical import _keys, _level_spec
+
+    assert len(buckets) == len(schedule.bucket_elems), \
+        f"{len(buckets)} buffers for {len(schedule.bucket_elems)} buckets"
+    keys = _keys(levels, level_keys)
+    state = [b.reshape(-1) for b in buckets]
+    for t in schedule.tasks:
+        axis, p = levels[t.level]
+        flat = state[t.bucket]
+        if t.op == "reduce_scatter" and flat.size < t.in_elems:
+            flat = jnp.pad(flat, (0, t.in_elems - flat.size))
+        spec = _level_spec(decision, keys[t.level], t.op,
+                           t.in_elems * flat.dtype.itemsize, p)
+        flat = apply_collective(t.op, flat, axis, p, spec,
+                                reduce_op=op).reshape(-1)
+        if t.op == "all_gather" and flat.size > t.out_elems:
+            flat = flat[:t.out_elems]
+        state[t.bucket] = flat
+    return state

@@ -17,10 +17,14 @@ from repro.core.topology.model import (
     probe_topology,
 )
 from repro.core.topology.tune import (
+    BUCKET_BYTES_CANDIDATES,
     decided_hierarchical_methods,
     flat_time,
     hierarchical_allreduce_time,
     optimal_hierarchical_allreduce_time,
     optimal_machine_allreduce_time,
+    pipelined_sync_time,
+    sequential_sync_time,
+    tune_overlap_schedule,
     tune_topology,
 )

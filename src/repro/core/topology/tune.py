@@ -17,9 +17,14 @@ from __future__ import annotations
 
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
-from repro.core.analytical.hierarchy import allreduce_phases
+from repro.core.analytical.hierarchy import (
+    allreduce_phases,
+    overlapped_allreduce_schedule,
+    padded_allreduce_schedule,
+)
 from repro.core.topology.decision import HierarchicalDecision
 from repro.core.topology.model import Topology
+from repro.core.tuning.decision import TableMeta
 from repro.core.tuning.executor import SimulatorBackend
 from repro.core.tuning.session import TunerReport, TuningSession
 from repro.core.tuning.simulator import NetworkSimulator
@@ -42,6 +47,7 @@ def tune_topology(
     tuners: Sequence[str] = ("exhaustive",),
     trials: int = 3,
     backend_factory: Optional[Callable] = None,
+    schedule_leaf_bytes: Optional[Sequence[int]] = None,
 ) -> Tuple[HierarchicalDecision, Dict[str, List[TunerReport]]]:
     """Run a TuningSession per level and keep each level's best table.
 
@@ -50,6 +56,12 @@ def tune_topology(
     level's own NetworkProfile. Returns the HierarchicalDecision plus the
     per-level TunerReports (the survey's budget/penalty axes, now per
     level).
+
+    ``schedule_leaf_bytes`` (a representative gradient-leaf byte mix)
+    additionally tunes the bucketed overlap schedule against the
+    pipelined cost model (`tune_overlap_schedule`) and stamps the
+    winning ``bucket_bytes`` into the artifact's meta, so consumers
+    bucket + pipeline by default.
     """
     levels, reports = [], {}
     for i, lv in enumerate(topology.levels):
@@ -63,7 +75,10 @@ def tune_topology(
         best = TuningSession.best(reps)
         levels.append((lv.name, best.table))
         reports[lv.name] = reps
-    return HierarchicalDecision(levels), reports
+    decision = HierarchicalDecision(levels)
+    if schedule_leaf_bytes is not None:
+        tune_overlap_schedule(topology, decision, schedule_leaf_bytes)
+    return decision, reports
 
 
 # ---------------------------------------------------------------------------
@@ -125,6 +140,109 @@ def optimal_hierarchical_allreduce_time(topology: Topology, m: int) -> float:
                                      methods_for(op, include_xla=False))
         total += t
     return total
+
+
+# ---------------------------------------------------------------------------
+# bucketed + overlap-pipelined gradient sync (survey §4.1 / CCTP)
+# ---------------------------------------------------------------------------
+#: fusion-bucket budget candidates swept by ``tune_overlap_schedule``
+BUCKET_BYTES_CANDIDATES = tuple((256 << 10) * 2 ** i for i in range(9))
+
+
+def _decided_phase_cost(topology: Topology,
+                        decision: HierarchicalDecision):
+    """``phase_cost(level, op, nbytes) -> (seconds, segments)`` pricing
+    each tier phase on ITS level's simulator under the decision's tuned
+    {algorithm, segments} — the ground-truth mirror of what the
+    pipelined executor dispatches."""
+    sims = {lv.name: NetworkSimulator(lv.profile)
+            for lv in topology.levels}
+
+    def phase_cost(level: int, op: str, nbytes: int):
+        lv = topology.levels[level]
+        spec = decision.spec_for_level(lv.name, op, int(nbytes), lv.size)
+        t = sims[lv.name].expected_time(op, spec.algorithm, lv.size,
+                                        nbytes, spec.segments)
+        return t, max(1, spec.segments)
+
+    return phase_cost
+
+
+def sequential_sync_time(topology: Topology,
+                         decision: HierarchicalDecision,
+                         chunk_bytes: Sequence[int]) -> float:
+    """Expected time of syncing ``chunk_bytes`` buffers (leaves or
+    fusion buckets) one after another, each through the strictly
+    sequential hierarchical composition — the pre-pipelining baseline.
+
+    Per-phase pricing is EXACTLY `pipelined_sync_time`'s (same padded
+    ``padded_allreduce_schedule`` byte flow, same per-level simulator
+    and tuned spec), so sequential-vs-pipelined comparisons measure
+    scheduling, never a byte-accounting convention."""
+    sizes = [lv.size for lv in topology.levels]
+    cost = _decided_phase_cost(topology, decision)
+    total = 0.0
+    for m in chunk_bytes:
+        for lvl, op, in_bytes, _ in padded_allreduce_schedule(sizes,
+                                                              int(m)):
+            total += cost(lvl, op, in_bytes)[0]
+    return total
+
+
+def pipelined_sync_time(topology: Topology,
+                        decision: HierarchicalDecision,
+                        bucket_bytes_list: Sequence[int]) -> float:
+    """Expected makespan of the bucketed, overlap-pipelined sync: the
+    buckets flow through the tiers as a software pipeline
+    (``overlapped_allreduce_schedule`` over the same task DAG the
+    executor walks), so tier i+1's phases hide under tier i's."""
+    sizes = [lv.size for lv in topology.levels]
+    makespan, _ = overlapped_allreduce_schedule(
+        sizes, [int(b) for b in bucket_bytes_list],
+        _decided_phase_cost(topology, decision))
+    return makespan
+
+
+def tune_overlap_schedule(
+    topology: Topology,
+    decision: HierarchicalDecision,
+    leaf_bytes: Sequence[int],
+    *,
+    leaf_dtypes: Optional[Sequence[str]] = None,
+    candidates: Sequence[int] = BUCKET_BYTES_CANDIDATES,
+    attach: bool = True,
+) -> Tuple[int, float]:
+    """Sweep the fusion-bucket budget against the pipelined cost model
+    and return ``(bucket_bytes, modeled_seconds)`` for the best one.
+
+    Too-small buckets pay per-collective launch latency; too-large ones
+    lose the overlap window (the survey's §4.1.3 sweet spot).
+    ``leaf_dtypes`` prices a mixed-dtype tree exactly as the execution
+    layout will split it (buckets are dtype-homogeneous); omitted, the
+    mix is treated as one homogeneous stream. With ``attach=True`` the
+    winning schedule is stamped into every level table's meta
+    (``{"bucket_bytes": ..., "pipeline": True}``), so the persisted
+    schema-3 artifact carries it and `Communicator.create` buckets +
+    pipelines by default; artifacts without the field keep today's
+    sequential per-leaf path.
+    """
+    from repro.core.collectives.schedule import coalesce_bytes
+
+    best: Optional[Tuple[int, float]] = None
+    for bb in candidates:
+        t = pipelined_sync_time(
+            topology, decision,
+            coalesce_bytes(leaf_bytes, bb, dtypes=leaf_dtypes))
+        if best is None or t < best[1]:
+            best = (int(bb), t)
+    assert best is not None, "no bucket-bytes candidates"
+    if attach:
+        for _, table in decision.levels:
+            if table.meta is None:
+                table.meta = TableMeta()
+            table.meta.schedule = {"bucket_bytes": best[0],
+                                   "pipeline": True}
+    return best
 
 
 def optimal_machine_allreduce_time(topology: Topology, m: int) -> float:

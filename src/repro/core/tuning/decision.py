@@ -29,6 +29,13 @@ class TableMeta:
     off-grid are nearest-neighbour extrapolations); profile is the
     NetworkProfile (or backend description) the measurements came from, so a
     runtime can detect it is loading a table tuned for a different fabric.
+
+    schedule optionally carries the tuned gradient-sync schedule, e.g.
+    ``{"bucket_bytes": 4194304, "pipeline": true}`` — the fusion-bucket
+    budget and whether tier phases software-pipeline across buckets.
+    Absent (every pre-existing artifact), consumers run the sequential
+    per-leaf path, so the on-disk schema stays backward-compatible in
+    both directions.
     """
 
     tuner: str = "unknown"
@@ -39,6 +46,7 @@ class TableMeta:
     penalty: Optional[float] = None
     backend: str = "simulator"
     profile: Optional[dict] = None
+    schedule: Optional[dict] = None
 
     def to_json(self) -> dict:
         return {
@@ -46,6 +54,7 @@ class TableMeta:
             "ps": list(self.ps), "ms": list(self.ms),
             "n_experiments": self.n_experiments, "penalty": self.penalty,
             "backend": self.backend, "profile": self.profile,
+            "schedule": self.schedule,
         }
 
     @classmethod
@@ -58,6 +67,7 @@ class TableMeta:
             penalty=d.get("penalty"),
             backend=d.get("backend", "simulator"),
             profile=d.get("profile"),
+            schedule=d.get("schedule"),
         )
 
 

@@ -168,10 +168,13 @@ def build_train_step(
             return new_params, new_opt, {"loss": loss, **aux}
     else:
         # partial-manual shard_map over the data axes (up to three tiers:
-        # "dcn" > "pod" > "data"): per-shard backward, tuned per-leaf
-        # gradient sync through the Communicator (which picks flat,
-        # psum-topped, or the full N-level hierarchical composition),
-        # local optimizer step on replicated params
+        # "dcn" > "pod" > "data"): per-shard backward, tuned gradient
+        # sync through the Communicator — per-leaf flat, psum-topped, or
+        # the full N-level hierarchical composition; with a fusion-bucket
+        # budget (CollectiveConfig.bucket_bytes / the artifact's tuned
+        # schedule) the leaves coalesce into buckets that
+        # overlap-pipeline across the tiers — then a local optimizer
+        # step on replicated params
         def fn(params, opt_state, batch):
             def inner(params, opt_state, batch):
                 (loss, aux), grads = grad_fn(params, batch)

@@ -53,8 +53,17 @@ def main():
                          "from a multi-backend artifact (instead of "
                          "first-table-wins)")
     ap.add_argument("--explain", action="store_true",
-                    help="print the per-leaf gradient-sync collective plan "
-                         "(algorithm/segments/level) before training")
+                    help="print the gradient-sync collective plan "
+                         "(algorithm/segments/level — the pipelined "
+                         "bucket schedule when bucketing is on) before "
+                         "training")
+    ap.add_argument("--bucket-mb", type=float, default=None,
+                    help="fusion-bucket budget in MiB for the bucketed, "
+                         "overlap-pipelined gradient sync (one tuned "
+                         "collective per bucket; tier i+1 phases pipeline "
+                         "under tier i). Default: the artifact's tuned "
+                         "schedule when it carries one; 0 forces the "
+                         "sequential per-leaf path")
     ap.add_argument("--topology", default=None,
                     help="network hierarchy: a 'PODSxDATA' spec (e.g. 2x4),"
                          " a 3-tier 'DCNxPODSxDATA' spec (e.g. 2x2x2), or "
@@ -126,11 +135,17 @@ def main():
     table_path = args.tuning_table or args.decision
     # the launch's single Communicator: probe -> select -> decide -> dispatch
     from repro.comms import Communicator
+    bucket_bytes = None if args.bucket_mb is None \
+        else int(args.bucket_mb * (1 << 20))
     comm = Communicator.create(
         mesh, topology=topology, artifact=table_path,
-        probe=args.probe_fabric, algorithm=args.collective)
+        probe=args.probe_fabric, algorithm=args.collective,
+        bucket_bytes=bucket_bytes)
     if table_path:
         print(f"tuning table: {table_path} ({comm.describe()})")
+    if comm.bucket_bytes:
+        print(f"gradient sync: bucketed overlap pipeline "
+              f"(bucket_bytes={comm.bucket_bytes})")
     elif args.probe_fabric:
         print(f"probed fabric: {comm.probed}")
     if args.probe_fabric and comm.probed_topology is not None:
@@ -139,7 +154,8 @@ def main():
             print(f"probed level {lv.name} (axis={lv.axis}, "
                   f"fan-out {lv.size}): launch={lv.profile.launch:.2e}s "
                   f"byte_time={lv.profile.byte_time:.2e}s/B")
-    coll = CollectiveConfig(algorithm=args.collective, decision=table_path)
+    coll = CollectiveConfig(algorithm=args.collective, decision=table_path,
+                            bucket_bytes=comm.bucket_bytes)
 
     fn, _, in_sh, out_sh, donate = build_train_step(
         cfg, shape, parallel, coll, mesh, lr=args.lr,

@@ -1,0 +1,115 @@
+"""Numpy machine mirror for the bucketed, pipelined gradient sync.
+
+Shared by the deterministic seeded sweep (tests/test_gradsync_pipeline)
+and the hypothesis generalization (tests/test_gradsync_properties):
+ranks live on a coordinate grid with one axis per tier (innermost
+first) plus a trailing element axis, the collective primitives have
+their textbook semantics, and the walk follows the PRODUCTION task list
+(`build_pipeline_schedule` — the same one `Communicator` executes and
+renders), proving bucketing + pipelining preserve the global-sum
+numerics for arbitrary trees, fan-outs and bucket budgets. The jax
+execution itself is pinned to the same schedule by the 8-device
+subprocess oracles (validate_communicator.py, validate_three_level.py).
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comms import BucketLayout
+from repro.core.collectives.schedule import build_pipeline_schedule
+
+
+def roundtrip_exact(shapes, dtypes, bucket_bytes, seed):
+    """flatten -> unflatten must be bit-identical for any tree of
+    ``shapes``/``dtypes`` (zero-size leaves and scalars included)."""
+    rng = np.random.default_rng(seed)
+    tree = {f"l{i}": jnp.asarray(
+        (rng.normal(size=shape) * 100).astype(dtype))
+        for i, (shape, dtype) in enumerate(zip(shapes, dtypes))}
+    layout = BucketLayout.plan(tree, bucket_bytes)
+    back = layout.unflatten(layout.flatten(tree))
+    for k in tree:
+        assert back[k].dtype == tree[k].dtype
+        assert back[k].shape == tree[k].shape
+        assert (np.asarray(back[k]) == np.asarray(tree[k])).all()
+    # every bucket is dtype-homogeneous and leaves stay in tree order
+    leaf_order = []
+    for b in layout.buckets:
+        assert all(s.size == int(np.prod(s.shape)) for s in b.slots)
+        leaf_order.extend(s.leaf for s in b.slots)
+    assert sorted(leaf_order) == list(range(len(tree)))
+
+
+def np_run_schedule(sched, bufs, sizes):
+    """Walk the pipeline tasks over the numpy mirror: bufs[k] has one
+    leading axis per tier (innermost first) + flat elements."""
+    for t in sched.tasks:
+        buf = bufs[t.bucket]
+        if t.op == "reduce_scatter":
+            cur = buf.shape[-1]
+            if t.in_elems > cur:
+                pad = [(0, 0)] * (buf.ndim - 1) + [(0, t.in_elems - cur)]
+                buf = np.pad(buf, pad)
+            summed = buf.sum(axis=t.level)
+            chunks = np.split(summed, sizes[t.level], axis=-1)
+            buf = np.stack(chunks, axis=t.level)
+        elif t.op == "all_reduce":
+            buf = np.broadcast_to(
+                buf.sum(axis=t.level, keepdims=True), buf.shape).copy()
+        else:
+            chunks = [np.take(buf, i, axis=t.level)
+                      for i in range(sizes[t.level])]
+            gathered = np.concatenate(chunks, axis=-1)
+            buf = np.stack([gathered] * sizes[t.level], axis=t.level)
+            buf = buf[..., :t.out_elems]
+        bufs[t.bucket] = buf
+    return bufs
+
+
+def np_bucketed_sync(sizes, shapes, bucket_bytes, seed):
+    """The acceptance property: a random float64 tree synced bucketed +
+    pipelined equals both the global-sum oracle and the per-leaf
+    sequential composition, at any level count."""
+    n_levels = len(sizes)
+    rng = np.random.default_rng(seed)
+    tree = {f"l{i}": rng.normal(size=tuple(sizes) + tuple(shape))
+            for i, shape in enumerate(shapes)}
+    oracle = {k: v.sum(axis=tuple(range(n_levels)))
+              for k, v in tree.items()}
+
+    def run(chunks):
+        bufs = [c.copy() for c in chunks]
+        sched = build_pipeline_schedule([b.shape[-1] for b in bufs],
+                                        sizes)
+        return np_run_schedule(sched, bufs, sizes)
+
+    flat_leaves = {k: v.reshape(tuple(sizes) + (-1,))
+                   for k, v in tree.items()}
+    nonzero = [k for k, v in flat_leaves.items() if v.shape[-1]]
+    per_leaf = dict(zip(nonzero, run([flat_leaves[k] for k in nonzero])))
+
+    # coalesce in tree order with the production greedy rule
+    elems = {k: flat_leaves[k].shape[-1] for k in tree}
+    groups, cur = [], []
+    for k in tree:
+        if not elems[k]:
+            continue
+        used = sum(elems[c] for c in cur) * 8
+        if cur and used + elems[k] * 8 > bucket_bytes:
+            groups.append(cur)
+            cur = []
+        cur.append(k)
+    if cur:
+        groups.append(cur)
+    fused = [np.concatenate([flat_leaves[k] for k in g], axis=-1)
+             for g in groups]
+    synced = run(fused)
+
+    for g, out in zip(groups, synced):
+        off = 0
+        for k in g:
+            got = out[..., off:off + elems[k]]
+            off += elems[k]
+            want = np.broadcast_to(oracle[k].reshape(-1), got.shape)
+            np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-9)
+            np.testing.assert_allclose(got, per_leaf[k], rtol=1e-9,
+                                       atol=1e-9)

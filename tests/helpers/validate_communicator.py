@@ -207,6 +207,69 @@ for cname, comm in (("table", comm_flat), ("hier", comm_hier),
                     want_tree[k], tol=2e-5)
 
 # ---------------------------------------------------------------------------
+# 3b) bucketed + pipelined sync == per-leaf path == oracle (2 levels)
+# ---------------------------------------------------------------------------
+btree = {"w": jnp.asarray(rng.normal(size=(OUTER, INNER, 33, 7)),
+                          jnp.float32),
+         "b": jnp.asarray(rng.normal(size=(OUTER, INNER, 5)), jnp.float32),
+         "z": jnp.zeros((OUTER, INNER, 0), jnp.float32),
+         "s": jnp.asarray(rng.normal(size=(OUTER, INNER, 129)),
+                          jnp.float32)}
+want_btree = jax.tree.map(lambda a: a.mean((0, 1)), btree)
+
+for cname, comm in (("table", comm_flat), ("hier", comm_hier),
+                    ("xla", comm_xla)):
+    def bsync(t, c=comm, bb=None):
+        local = jax.tree.map(lambda a: a[0, 0], t)
+        out = c.sync_gradients(local, mean=True, bucket_bytes=bb)
+        return jax.tree.map(lambda a: a[None, None], out)
+
+    runner = lambda fn: jax.jit(compat.shard_map(
+        fn, mesh=mesh,
+        in_specs=(jax.tree.map(lambda _: P("pod", "data"), btree),),
+        out_specs=jax.tree.map(lambda _: P("pod", "data"), btree),
+        check_vma=False))(btree)
+
+    leafwise = runner(lambda t, c=comm: bsync(t, c, None))
+    for bb in (256, 1 << 20):
+        got_b = runner(lambda t, c=comm, b=bb: bsync(t, c, b))
+        for k in btree:
+            if not btree[k].size:
+                check(f"bucketed_zero_leaf/{cname}/{bb}/{k}",
+                      got_b[k].shape == btree[k].shape)
+                continue
+            check_close(f"bucketed_sync_vs_oracle/{cname}/{bb}/{k}",
+                        got_b[k][0, 0], want_btree[k], tol=3e-5)
+            check_close(f"bucketed_sync_vs_per_leaf/{cname}/{bb}/{k}",
+                        got_b[k][0, 0], leafwise[k][0, 0], tol=3e-5)
+
+# bucketed explain == executed, flat (tuned + psum top) and hierarchical
+for cname, base in (("table", comm_flat), ("hier", comm_hier)):
+    rec_b = RecordingComm(base)
+    jax.eval_shape(
+        compat.shard_map(
+            lambda t: jax.tree.map(
+                lambda a: a[None, None],
+                rec_b.sync_gradients(jax.tree.map(lambda a: a[0, 0], t),
+                                     mean=True, bucket_bytes=512)),
+            mesh=mesh,
+            in_specs=(jax.tree.map(lambda _: P("pod", "data"), btree),),
+            out_specs=jax.tree.map(lambda _: P("pod", "data"), btree),
+            check_vma=False),
+        btree)
+    local_btree = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape[2:], a.dtype), btree)
+    bplan = base.explain_gradients(local_btree, bucket_bytes=512)
+    bplanned = [(e.request.op, e.request.nbytes, e.request.axis_size,
+                 e.level, e.spec.algorithm, e.spec.segments)
+                for e in bplan.entries if e.source != "psum"]
+    check(f"bucketed_explain_matches_executed/{cname}",
+          rec_b.log == bplanned,
+          f"\n  executed={rec_b.log}\n  planned ={bplanned}")
+    check(f"bucketed_plan_tagged/{cname}",
+          all(e.bucket is not None for e in bplan.entries))
+
+# ---------------------------------------------------------------------------
 # 4) explain() == executed lookups (recording probe), flat and hierarchical
 # ---------------------------------------------------------------------------
 for cname, base in (("table", comm_flat), ("hier", comm_hier)):

@@ -177,7 +177,83 @@ for cname, comm in (("hier", comm_hier), ("xla", comm_xla)):
                     tol=2e-5)
 
 # ---------------------------------------------------------------------------
-# 3) explain_gradients == recorded per-level lookups, all three levels
+# 3) bucketed + pipelined sync == per-leaf path == global psum oracle
+# ---------------------------------------------------------------------------
+btree = {"w": jnp.asarray(rng.normal(size=(DCN, POD, DATA, 33, 7)),
+                          jnp.float32),
+         "b": jnp.asarray(rng.normal(size=(DCN, POD, DATA, 5)),
+                          jnp.float32),
+         "z": jnp.zeros((DCN, POD, DATA, 0), jnp.float32),
+         "s": jnp.asarray(rng.normal(size=(DCN, POD, DATA, 129)),
+                          jnp.float32)}
+want_btree = jax.tree.map(lambda a: a.mean((0, 1, 2)), btree)
+
+
+def run_bsync(sync_leaf_tree, tree_):
+    def sync(t):
+        local = jax.tree.map(lambda a: a[0, 0, 0], t)
+        out = sync_leaf_tree(local)
+        return jax.tree.map(lambda a: a[None, None, None], out)
+    return jax.jit(compat.shard_map(
+        sync, mesh=mesh,
+        in_specs=(jax.tree.map(lambda _: P("dcn", "pod", "data"), tree_),),
+        out_specs=jax.tree.map(lambda _: P("dcn", "pod", "data"), tree_),
+        check_vma=False))(tree_)
+
+
+for cname, comm in (("hier", comm_hier), ("xla", comm_xla)):
+    leafwise = run_bsync(
+        lambda t, c=comm: c.sync_gradients(t, mean=True), btree)
+    for bb in (256, 1 << 20):
+        got_b = run_bsync(
+            lambda t, c=comm, b=bb: c.sync_gradients(t, mean=True,
+                                                     bucket_bytes=b),
+            btree)
+        for k in btree:
+            if not btree[k].size:
+                ok = got_b[k].shape == btree[k].shape
+                check(f"bucketed_zero_leaf/{cname}/{bb}/{k}", ok)
+                continue
+            check_close(f"bucketed_sync_vs_oracle/{cname}/{bb}/{k}",
+                        got_b[k][0, 0, 0], want_btree[k], tol=3e-5)
+            check_close(f"bucketed_sync_vs_per_leaf/{cname}/{bb}/{k}",
+                        got_b[k][0, 0, 0], leafwise[k][0, 0, 0],
+                        tol=3e-5)
+
+# the bucketed plan is the executed pipelined schedule
+rec_b = RecordingComm(comm_hier)
+jax.eval_shape(
+    compat.shard_map(
+        lambda t: jax.tree.map(
+            lambda a: a[None, None, None],
+            rec_b.sync_gradients(jax.tree.map(lambda a: a[0, 0, 0], t),
+                                 mean=True, bucket_bytes=512)),
+        mesh=mesh,
+        in_specs=(jax.tree.map(lambda _: P("dcn", "pod", "data"), btree),),
+        out_specs=jax.tree.map(lambda _: P("dcn", "pod", "data"), btree),
+        check_vma=False),
+    btree)
+local_btree = jax.tree.map(
+    lambda a: jax.ShapeDtypeStruct(a.shape[3:], a.dtype), btree)
+bplan = comm_hier.explain_gradients(local_btree, bucket_bytes=512)
+bplanned = [(e.request.op, e.request.nbytes, e.request.axis_size,
+             e.level, e.spec.algorithm, e.spec.segments)
+            for e in bplan.entries if e.source != "psum"]
+check("bucketed_explain_matches_executed", rec_b.log == bplanned,
+      f"\n  executed={rec_b.log}\n  planned ={bplanned}")
+check("bucketed_plan_is_pipelined",
+      all(e.bucket is not None and e.step is not None
+          for e in bplan.entries)
+      and max(e.step for e in bplan.entries) > 4,
+      f"steps={[e.step for e in bplan.entries]}")
+check("bucketed_plan_interleaves_buckets",
+      [ (e.bucket, e.request.op) for e in bplan.entries[:3] ]
+      == [(0, "reduce_scatter"), (0, "reduce_scatter"),
+          (1, "reduce_scatter")],
+      f"head={[(e.bucket, e.request.op) for e in bplan.entries[:3]]}")
+
+# ---------------------------------------------------------------------------
+# 4) explain_gradients == recorded per-level lookups, all three levels
 # ---------------------------------------------------------------------------
 rec = RecordingComm(comm_hier)
 

@@ -1,0 +1,437 @@
+"""Bucketed, overlap-pipelined gradient sync: bucketing bit-identity,
+schedule DAG legality, the overlapped cost model, artifact schedule
+round-trip, Communicator plan rendering, and decision-resolution caching.
+
+The real 8-device executions live in the subprocess oracles
+(tests/helpers/validate_communicator.py, validate_three_level.py); the
+fast tests here drive the same schedule with a numpy machine mirror and
+fake meshes.
+"""
+import math
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comms import BucketLayout, Communicator, coalesce_bytes
+from repro.core.analytical.base import Hockney
+from repro.core.analytical.hierarchy import (
+    hierarchical_allreduce_cost,
+    overlapped_allreduce_schedule,
+    overlapped_allreduce_time,
+)
+from repro.core.collectives.schedule import build_pipeline_schedule
+from repro.core.topology import (
+    Topology,
+    pipelined_sync_time,
+    sequential_sync_time,
+    tune_overlap_schedule,
+)
+from repro.core.topology.decision import HierarchicalDecision
+from repro.core.tuning.decision import DecisionTable, TableMeta
+from repro.core.tuning.space import Method
+
+
+def fake_mesh(dcn=None, pod=None, data=2):
+    axes, shape = [], []
+    for name, size in (("dcn", dcn), ("pod", pod), ("data", data)):
+        if size:
+            axes.append(name)
+            shape.append(size)
+    return SimpleNamespace(axis_names=tuple(axes),
+                           shape=dict(zip(axes, shape)),
+                           devices=np.arange(math.prod(shape)))
+
+
+def hier3():
+    return HierarchicalDecision([
+        ("intra_host", DecisionTable({
+            ("reduce_scatter", 2, 1024): Method("ring", 1),
+            ("all_gather", 2, 1024): Method("bruck", 1)})),
+        ("intra_pod", DecisionTable({
+            ("reduce_scatter", 2, 1024): Method("recursive_halving", 1),
+            ("all_gather", 2, 1024): Method("ring", 1)})),
+        ("cross_pod", DecisionTable({
+            ("all_reduce", 2, 1024): Method("recursive_doubling", 1)})),
+    ])
+
+
+# ---------------------------------------------------------------------------
+# coalesce_bytes / BucketLayout
+# ---------------------------------------------------------------------------
+def test_coalesce_bytes_greedy_rule():
+    assert coalesce_bytes([], 64) == []
+    assert coalesce_bytes([10, 10, 10], 0) == [30]       # 0 = fuse all
+    assert coalesce_bytes([40, 28, 20, 0, 4], 64) == [40, 52]
+    # an oversized leaf gets its own bucket, neighbours are not dragged in
+    assert coalesce_bytes([100, 8, 8], 64) == [100, 16]
+    # sum is always preserved
+    assert sum(coalesce_bytes([3, 99, 1, 50], 64)) == 153
+
+
+def test_coalesce_bytes_dtype_streams_match_execution_layout():
+    """With dtypes given, the model-side packing is exactly the
+    execution layout's per-dtype split (one shared pack_buckets rule)."""
+    shapes = [(10,), (4,), (8,), (2,), (0,)]
+    dts = ["float32", "bfloat16", "float32", "bfloat16", "float32"]
+    tree = {f"l{i}": jnp.zeros(s, dt)
+            for i, (s, dt) in enumerate(zip(shapes, dts))}
+    nbytes = [int(np.prod(s)) * np.dtype(dt).itemsize
+              for s, dt in zip(shapes, dts)]
+    for bb in (1, 16, 40, 1 << 20):
+        layout = BucketLayout.plan(tree, bb)
+        assert coalesce_bytes(nbytes, bb, dtypes=dts) \
+            == [b.nbytes for b in layout.buckets if b.elems]
+    # dtype-blind packing fuses across dtypes and genuinely differs
+    assert coalesce_bytes(nbytes, 1 << 20) == [sum(nbytes)]
+
+
+def test_bucket_layout_dtype_homogeneous_and_order_stable():
+    tree = {"a": jnp.zeros((8,), jnp.float32),
+            "b": jnp.zeros((4,), jnp.bfloat16),
+            "c": jnp.zeros((8,), jnp.float32)}
+    layout = BucketLayout.plan(tree, 1 << 20)
+    for b in layout.buckets:
+        assert len({b.dtype}) == 1
+        offs = [s.offset for s in b.slots]
+        assert offs == sorted(offs)                      # order-stable
+    dtypes = {b.dtype for b in layout.buckets}
+    assert dtypes == {"float32", "bfloat16"}
+
+
+def test_bucket_layout_roundtrip_zero_size_and_scalar():
+    tree = {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "z": jnp.zeros((0, 5), jnp.float32),
+            "s": jnp.asarray(3.5, jnp.float32)}
+    layout = BucketLayout.plan(tree, 8)
+    back = layout.unflatten(layout.flatten(tree))
+    for k in tree:
+        assert back[k].shape == tree[k].shape
+        assert back[k].dtype == tree[k].dtype
+        assert (np.asarray(back[k]) == np.asarray(tree[k])).all()
+
+
+# ---------------------------------------------------------------------------
+# schedule DAG
+# ---------------------------------------------------------------------------
+def test_pipeline_schedule_steps_and_deps():
+    sched = build_pipeline_schedule([100, 50], [2, 2, 2])
+    assert sched.n_phases == 5
+    assert sched.n_steps == 2 + 5 - 1                    # fill + drain
+    seen = set()
+    for t in sched.tasks:
+        assert t.step == t.bucket + t.phase              # longest path
+        for dep in t.deps:
+            assert dep in seen, f"dep {dep} issues after {t}"
+        seen.add((t.bucket, t.phase))
+    # phase chain per bucket appears in order (data deps respected)
+    for k in (0, 1):
+        phases = [t.phase for t in sched.tasks if t.bucket == k]
+        assert phases == sorted(phases)
+    # levels walk in-out-in: rs@0, rs@1, ar@2, ag@1, ag@0
+    chain = [(t.op, t.level) for t in sched.tasks if t.bucket == 0]
+    assert chain == [("reduce_scatter", 0), ("reduce_scatter", 1),
+                     ("all_reduce", 2), ("all_gather", 1),
+                     ("all_gather", 0)]
+
+
+def test_pipeline_schedule_single_tier_degenerates():
+    sched = build_pipeline_schedule([10, 20, 30], [4])
+    assert sched.n_phases == 1
+    assert [t.op for t in sched.tasks] == ["all_reduce"] * 3
+    assert [t.step for t in sched.tasks] == [0, 1, 2]
+
+
+# ---------------------------------------------------------------------------
+# overlapped cost model
+# ---------------------------------------------------------------------------
+LEVELS = [(4, Hockney(1e-6, 1e-9)), (2, Hockney(5e-6, 1e-8))]
+
+
+def test_overlapped_time_beats_sequential_and_degenerates():
+    buckets = [1 << 20] * 6
+    t_pipe = overlapped_allreduce_time(LEVELS, buckets)
+    t_seq = sum(hierarchical_allreduce_cost(LEVELS, b) for b in buckets)
+    assert t_pipe < t_seq
+    # one bucket: nothing to overlap — exactly the sequential composition
+    one = overlapped_allreduce_time(LEVELS, [1 << 20])
+    assert one == pytest.approx(hierarchical_allreduce_cost(LEVELS,
+                                                            1 << 20))
+
+
+def test_overlapped_schedule_fill_plus_steady_state():
+    """With equal buckets and per-phase costs, the makespan is the fill
+    (one full chain) plus (K-1) paced by the busiest tier."""
+    def phase_cost(level, op, nbytes):
+        return {0: 1.0, 1: 3.0}[level], 1
+    # phases per bucket: rs@0 (1s), ar@1 (3s), ag@0 (1s): chain = 5s,
+    # busiest tier = tier 1 at 3s/bucket
+    K = 5
+    makespan, timed = overlapped_allreduce_schedule(
+        [2, 2], [100] * K, phase_cost)
+    assert makespan == pytest.approx(5.0 + (K - 1) * 3.0)
+    assert len(timed) == K * 3
+    # monotone: tasks never start before their data dependency finishes
+    fin = {(t.bucket, t.phase): f for t, _, f in timed}
+    for t, start, _ in timed:
+        for dep in t.deps:
+            # wire deps share a serial tier; data deps order phases. At
+            # segment granularity a successor may start once the FIRST
+            # covering segment lands, so compare against the dep's start
+            assert start >= fin[dep] - 3.0
+
+
+def test_segment_granularity_tightens_the_pipeline():
+    """Segmented phases overlap at segment (not phase) granularity: the
+    same work split into 4 segments per phase starts successors earlier,
+    never later."""
+    def cost_seg(level, op, nbytes):
+        return 2.0, 4
+    def cost_whole(level, op, nbytes):
+        return 2.0, 1
+    seg, _ = overlapped_allreduce_schedule([2, 2], [64] * 4, cost_seg)
+    whole, _ = overlapped_allreduce_schedule([2, 2], [64] * 4, cost_whole)
+    assert seg <= whole
+
+
+def test_simulator_pipelined_sync_time_consistency():
+    topo = Topology.from_spec("2x2x2")
+    ms = tuple(4096 * 4 ** i for i in range(4))
+    from repro.core.topology import tune_topology
+    decision, _ = tune_topology(topo, ms=ms)
+    leaves = [64 << 10] * 16
+    t_leaf = sequential_sync_time(topo, decision, leaves)
+    chunks = coalesce_bytes(leaves, 256 << 10)
+    t_pipe = pipelined_sync_time(topo, decision, chunks)
+    assert 0 < t_pipe <= t_leaf
+    bb, t_best = tune_overlap_schedule(topo, decision, leaves)
+    assert t_best <= t_pipe
+    # the winning schedule is stamped into every level table's meta
+    for _, table in decision.levels:
+        assert table.meta is not None
+        assert table.meta.schedule == {"bucket_bytes": bb,
+                                       "pipeline": True}
+
+
+def test_sequential_and_pipelined_share_padded_byte_flow():
+    """Sequential and pipelined pricing walk the same padded schedule:
+    for chunk sizes NOT divisible by the fan-outs, pipelining the very
+    same chunks must never model slower than running them sequentially
+    (a convention mismatch — padded vs unpadded bytes — would)."""
+    topo = Topology.from_spec("2x2x2")
+    ms = tuple(4096 * 4 ** i for i in range(3))
+    from repro.core.topology import tune_topology
+    decision, _ = tune_topology(topo, ms=ms)
+    for chunks in ([10], [10, 7], [4097, 333, 10]):   # odd sizes
+        t_seq = sequential_sync_time(topo, decision, chunks)
+        t_pipe = pipelined_sync_time(topo, decision, chunks)
+        assert t_pipe <= t_seq + 1e-12, (chunks, t_pipe, t_seq)
+        if len(chunks) == 1:
+            assert t_pipe == pytest.approx(t_seq)     # nothing overlaps
+
+
+# ---------------------------------------------------------------------------
+# artifact schedule round-trip (schema stays backward-compatible)
+# ---------------------------------------------------------------------------
+def test_schedule_roundtrip_schema2_and_schema3(tmp_path):
+    table = DecisionTable({("all_reduce", 2, 1024): Method("ring", 2)},
+                          meta=TableMeta(tuner="handmade",
+                                         schedule={"bucket_bytes": 4096,
+                                                   "pipeline": True}))
+    p2 = str(tmp_path / "t2.json")
+    table.save(p2)
+    loaded = DecisionTable.load(p2)
+    assert loaded.meta.schedule == {"bucket_bytes": 4096, "pipeline": True}
+
+    hier = HierarchicalDecision([("intra_pod", table)])
+    p3 = str(tmp_path / "t3.json")
+    hier.save(p3)
+    assert HierarchicalDecision.load(p3).levels[0][1].meta.schedule \
+        == {"bucket_bytes": 4096, "pipeline": True}
+
+    # absence stays absent: pre-schedule artifacts keep the per-leaf path
+    bare = DecisionTable({("all_reduce", 2, 1024): Method("ring", 1)},
+                         meta=TableMeta(tuner="handmade"))
+    pb = str(tmp_path / "bare.json")
+    bare.save(pb)
+    assert DecisionTable.load(pb).meta.schedule is None
+
+
+def test_communicator_adopts_artifact_schedule():
+    mesh = fake_mesh(pod=2, data=2)
+    table = DecisionTable({("all_reduce", 2, 1024): Method("ring", 2)},
+                          meta=TableMeta(tuner="handmade",
+                                         schedule={"bucket_bytes": 8192,
+                                                   "pipeline": True}))
+    comm = Communicator.create(mesh, artifact=table)
+    assert comm.bucket_bytes == 8192
+    assert "bucket_bytes=8192" in comm.describe()
+    # explicit override wins; 0 disables
+    assert Communicator.create(mesh, artifact=table,
+                               bucket_bytes=123).bucket_bytes == 123
+    assert Communicator.create(mesh, artifact=table,
+                               bucket_bytes=0).bucket_bytes == 0
+    # schedule-less artifacts keep the per-leaf path
+    bare = DecisionTable({("all_reduce", 2, 1024): Method("ring", 1)})
+    assert Communicator.create(mesh, artifact=bare).bucket_bytes == 0
+
+
+def test_collective_config_bucket_bytes_force_disable():
+    """A CollectiveConfig can express all three states: None = adopt
+    the artifact's schedule, 0 = force per-leaf even over a
+    schedule-carrying artifact, >0 = force that budget — so a rebuild
+    from config never silently re-enables what a launcher disabled."""
+    from repro.configs.base import CollectiveConfig
+    mesh = fake_mesh(pod=2, data=2)
+    table = DecisionTable({("all_reduce", 2, 1024): Method("ring", 2)},
+                          meta=TableMeta(tuner="handmade",
+                                         schedule={"bucket_bytes": 8192,
+                                                   "pipeline": True}))
+    make = lambda bb: Communicator.from_config(
+        CollectiveConfig(decision=table, bucket_bytes=bb), mesh)
+    assert make(None).bucket_bytes == 8192
+    assert make(0).bucket_bytes == 0
+    assert make(4096).bucket_bytes == 4096
+
+
+# ---------------------------------------------------------------------------
+# Communicator bucketed plan rendering (fake mesh, no devices needed)
+# ---------------------------------------------------------------------------
+def test_explain_gradients_renders_pipelined_schedule():
+    mesh = fake_mesh(dcn=2, pod=2, data=2)
+    comm = Communicator.create(mesh, artifact=hier3())
+    tree = {"w": jax.ShapeDtypeStruct((300,), "float32"),
+            "b": jax.ShapeDtypeStruct((5,), "float32"),
+            "v": jax.ShapeDtypeStruct((200,), "float32")}
+    plan = comm.explain_gradients(tree, bucket_bytes=1024)
+    # 3 leaves -> 2 buckets (300*4=1200B own bucket; 5+200 fuse)
+    buckets = {e.bucket for e in plan.entries}
+    assert buckets == {0, 1}
+    assert len(plan.entries) == 2 * 5
+    # pipelined issue order: steps monotone, bucket 1's first phase
+    # issues inside bucket 0's chain, and the rendered text says so
+    steps = [e.step for e in plan.entries]
+    assert steps == sorted(steps)
+    assert max(steps) == 2 + 5 - 2
+    interleaved = [(e.bucket, e.request.op) for e in plan.entries[:3]]
+    assert interleaved == [(0, "reduce_scatter"), (0, "reduce_scatter"),
+                           (1, "reduce_scatter")]
+    rendered = plan.render()
+    assert "bucket=1 step=1" in rendered
+    for name in ("intra_host", "intra_pod", "cross_pod"):
+        assert name in rendered
+    # without a budget the per-leaf plan is unchanged (3 x 5 entries)
+    assert len(comm.explain_gradients(tree).entries) == 15
+
+
+def test_explain_gradients_bucketed_flat_policy_psum_top():
+    mesh = fake_mesh(dcn=2, pod=2, data=2)
+    table = DecisionTable({("all_reduce", 2, 1024): Method("ring", 2)},
+                          meta=TableMeta(tuner="handmade"))
+    comm = Communicator.create(mesh, artifact=table)
+    tree = {"w": jax.ShapeDtypeStruct((64,), "float32"),
+            "b": jax.ShapeDtypeStruct((8,), "float32")}
+    plan = comm.explain_gradients(tree, bucket_bytes=1 << 20)
+    # one fused bucket: one tuned all-reduce + one psum per outer tier
+    assert [e.source for e in plan.entries] \
+        == ["table:handmade", "psum", "psum"]
+    assert plan.entries[0].request.nbytes == 72 * 4
+    assert [e.request.axis for e in plan.entries[1:]] == ["pod", "dcn"]
+
+
+# ---------------------------------------------------------------------------
+# decision-resolution caching (satellite)
+# ---------------------------------------------------------------------------
+class _CountingPolicy:
+    kind = "table"
+
+    def __init__(self):
+        self.resolves = 0
+        self.level_specs = 0
+
+    def resolve(self, req):
+        from repro.comms.report import PlanEntry
+        from repro.core.collectives.dispatch import CollectiveSpec
+        self.resolves += 1
+        return PlanEntry(req, CollectiveSpec("ring", 1), source="count")
+
+    def level_spec(self, level, op, nbytes, p):
+        from repro.core.collectives.dispatch import CollectiveSpec
+        self.level_specs += 1
+        return CollectiveSpec("ring", 1)
+
+    def describe(self):
+        return "counting"
+
+
+def test_resolution_cache_hits_repeated_leaves():
+    from repro.comms import CollectiveRequest
+    mesh = fake_mesh(pod=2, data=2)
+    policy = _CountingPolicy()
+    comm = Communicator(mesh, policy=policy)
+    req = CollectiveRequest("all_reduce", 4096, axis="data", axis_size=2)
+    for _ in range(50):
+        comm.spec(req)
+    assert policy.resolves == 1                   # memoized
+    other = CollectiveRequest("all_reduce", 8192, axis="data", axis_size=2)
+    comm.spec(other)
+    assert policy.resolves == 2                   # distinct key -> miss
+    for _ in range(50):
+        comm.spec_for_level(0, "all_reduce", 4096, 2)
+        comm.spec_for_level(1, "all_reduce", 4096, 2)
+    assert policy.level_specs == 2
+
+
+def test_level_keys_cache():
+    mesh = fake_mesh(dcn=2, pod=2, data=2)
+    comm = Communicator.create(mesh, artifact=hier3())
+    calls = []
+    orig = comm._policy.level_keys
+
+    def counting(axes):
+        calls.append(tuple(axes))
+        return orig(axes)
+
+    comm._policy.level_keys = counting
+    for _ in range(10):
+        keys = comm._level_keys(("data", "pod", "dcn"))
+    # the full innermost-first sync stack maps positionally
+    assert keys == [0, 1, 2]
+    assert len(calls) == 1
+    # cached copies are defensive: mutating the result is harmless
+    keys.append("junk")
+    assert comm._level_keys(("data", "pod", "dcn")) == [0, 1, 2]
+
+
+# ---------------------------------------------------------------------------
+# deterministic mini-sweep of the acceptance properties (the hypothesis
+# generalizations live in tests/test_gradsync_properties.py, which
+# importorskips hypothesis — this sweep runs everywhere)
+# ---------------------------------------------------------------------------
+from helpers.gradsync_mirror import (  # noqa: E402
+    np_bucketed_sync,
+    roundtrip_exact,
+)
+
+
+def test_bucket_roundtrip_bit_identical_seeded_sweep():
+    for seed in range(8):
+        rng = np.random.default_rng(seed)
+        shapes = [tuple(rng.integers(0, 5, size=rng.integers(0, 4)))
+                  for _ in range(rng.integers(1, 8))]
+        dtypes = rng.choice(["float32", "float64", "int32"],
+                            size=len(shapes))
+        bucket_bytes = int(rng.integers(1, 512))
+        roundtrip_exact(shapes, dtypes, bucket_bytes, seed)
+
+
+def test_bucketed_pipelined_equals_per_leaf_and_global_sum_seeded():
+    for seed in range(6):
+        rng = np.random.default_rng(seed)
+        n_levels = int(rng.integers(1, 4))
+        sizes = [int(rng.choice([2, 3, 4])) for _ in range(n_levels)]
+        shapes = [tuple(rng.integers(0, 5, size=rng.integers(0, 4)))
+                  for _ in range(rng.integers(1, 8))]
+        np_bucketed_sync(sizes, shapes, int(rng.integers(1, 256)), seed)

@@ -1,0 +1,35 @@
+"""Hypothesis properties for the bucketed, overlap-pipelined gradient
+sync: (a) flatten/unflatten bit-identity over random mixed-dtype trees
+with zero-size leaves, (b) bucketed+pipelined schedule == per-leaf
+sequential == global-sum oracle on the numpy machine mirror at 1-3
+levels and random fan-outs — the acceptance property, generalized
+beyond the seeded sweep in test_gradsync_pipeline.py."""
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from helpers.gradsync_mirror import np_bucketed_sync, roundtrip_exact
+
+_DTYPES = ("float32", "float64", "int32")
+
+shape_st = st.lists(st.integers(0, 5), min_size=0, max_size=3) \
+    .map(tuple)
+shapes_st = st.lists(shape_st, min_size=1, max_size=8)
+
+
+@given(shapes_st,
+       st.lists(st.sampled_from(_DTYPES), min_size=8, max_size=8),
+       st.integers(1, 512), st.integers(0, 10 ** 9))
+@settings(max_examples=50, deadline=None)
+def test_bucket_roundtrip_bit_identical(shapes, dtypes, bucket_bytes,
+                                        seed):
+    roundtrip_exact(shapes, dtypes[:len(shapes)], bucket_bytes, seed)
+
+
+@given(st.lists(st.sampled_from([2, 3, 4]), min_size=1, max_size=3),
+       shapes_st, st.integers(1, 256), st.integers(0, 10 ** 9))
+@settings(max_examples=40, deadline=None)
+def test_bucketed_pipelined_equals_per_leaf_and_global_sum(
+        sizes, shapes, bucket_bytes, seed):
+    np_bucketed_sync(sizes, shapes, bucket_bytes, seed)

@@ -121,12 +121,16 @@ def test_train_cli_three_level_topology_8dev(tmp_path):
     """The acceptance path: --topology 2x2x2 + a 3-table schema-3
     artifact on 8 simulated devices builds the ("dcn", "pod", "data")
     mesh, routes sync_gradients through the 3-level composition, and
-    --explain prints plan entries at ALL THREE levels."""
+    --explain prints plan entries at ALL THREE levels. The artifact
+    carries a tuned bucket schedule, so the sync runs bucketed +
+    overlap-pipelined and the rendered plan is the pipeline (bucket /
+    step tags on every phase)."""
     import sys as _sys
     _sys.path.insert(0, SRC)
     from repro.core.topology import Topology, tune_topology
     topo = Topology.from_spec("2x2x2")
-    dec, _ = tune_topology(topo, ms=tuple(1024 * 16 ** i for i in range(4)))
+    dec, _ = tune_topology(topo, ms=tuple(1024 * 16 ** i for i in range(4)),
+                           schedule_leaf_bytes=[64 << 10] * 8)
     art = str(tmp_path / "hier3.json")
     dec.save(art)
     r = _run(["repro.launch.train", "--arch", "smollm-135m", "--reduced",
@@ -139,8 +143,32 @@ def test_train_cli_three_level_topology_8dev(tmp_path):
     assert "hierarchical, levels=['intra_host', 'intra_pod', " \
         "'cross_pod']" in r.stdout
     assert "'dcn': 2" in r.stdout and "'pod': 2" in r.stdout
+    # the tuned schedule was adopted and the plan is the pipeline
+    assert "bucketed overlap pipeline" in r.stdout
+    assert "bucket=0 step=0" in r.stdout
     # the rendered gradient plan reaches every level of the hierarchy
     for level in ("level=intra_host", "level=intra_pod",
                   "level=cross_pod"):
         assert level in r.stdout
+    assert "step    1" in r.stdout
+
+
+def test_train_cli_bucket_mb_override_8dev(tmp_path):
+    """--bucket-mb forces the fusion-bucket budget over a schedule-less
+    artifact: the per-leaf plan becomes the bucketed pipeline."""
+    import sys as _sys
+    _sys.path.insert(0, SRC)
+    from repro.core.topology import Topology, tune_topology
+    topo = Topology.two_level(4, 2)
+    dec, _ = tune_topology(topo, ms=tuple(1024 * 16 ** i for i in range(4)))
+    art = str(tmp_path / "hier.json")
+    dec.save(art)
+    r = _run(["repro.launch.train", "--arch", "smollm-135m", "--reduced",
+              "--steps", "2", "--seq", "64", "--batch", "8",
+              "--topology", "2x4", "--tuning-table", art, "--explain",
+              "--bucket-mb", "0.25"],
+             xla_devices=8)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert f"bucket_bytes={256 << 10}" in r.stdout
+    assert "bucket=0 step=0" in r.stdout
     assert "step    1" in r.stdout
