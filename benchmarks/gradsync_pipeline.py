@@ -16,14 +16,26 @@ table reports the modeled full-tree sync time of
   * bucketed+pipelined — the same buckets software-pipelined across the
                          tiers (`overlapped_allreduce_schedule` over
                          the exact task DAG the executor walks): tier
-                         i+1 phases hide under tier i.
+                         i+1 phases hide under tier i;
+  * backward-overlapped— the --overlap-backward release path: bucket k
+                         issues the moment layer k's backward compute
+                         materializes its gradients and flows through
+                         double-buffered permute streams
+                         (`streamed_sync_time` over the same
+                         `build_stream_schedule` DAG the executor
+                         issues). Reported time is the EXPOSED
+                         communication — makespan minus the backward
+                         compute it hides under (compute slices sized
+                         proportional to bucket bytes, totalling 2x the
+                         pipelined sync time).
 
 Leaf mixes cover the shapes that hurt differently: many-small (launch
 bound), transformer-ish (bimodal), few-large (bandwidth bound, where
 bucketing alone cannot help and only the pipeline wins). Topologies are
 swept at 2 levels (pod/DCN) and the full 3-level host/pod/DCN stack.
 Acceptance: bucketed+pipelined <= leaf-sequential everywhere, strictly
-below on the 3-level topology.
+below on the 3-level topology; backward-overlapped exposed comm <=
+bucketed+pipelined everywhere, strictly below on the 3-level topology.
 
 CSV rows: ``gradsync/<spec>/<mix>/<strategy>, us, speedup vs
 leaf-sequential``. ``benchmarks/run.py --json`` snapshots the table to
@@ -44,6 +56,7 @@ from repro.core.topology import (
     Topology,
     pipelined_sync_time,
     sequential_sync_time,
+    streamed_sync_time,
     tune_overlap_schedule,
     tune_topology,
 )
@@ -94,28 +107,51 @@ def run():
             t_leaf = sequential_sync_time(topo, decision, leaves)
             t_bucket = sequential_sync_time(topo, decision, buckets)
             t_pipe = pipelined_sync_time(topo, decision, buckets)
+            # backward compute slices proportional to bucket bytes,
+            # totalling 2x the pipelined sync — the regime
+            # --overlap-backward targets (comm roughly hideable)
+            total_b = sum(buckets) or 1
+            compute = [2.0 * t_pipe * b / total_b for b in buckets]
+            t_stream = streamed_sync_time(topo, decision, buckets,
+                                          compute)
+            t_overlap = max(0.0, t_stream - sum(compute))
             for strat, t in (("leaf-sequential", t_leaf),
                              ("bucketed", t_bucket),
-                             ("bucketed+pipelined", t_pipe)):
+                             ("bucketed+pipelined", t_pipe),
+                             ("backward-overlapped", t_overlap)):
                 row(f"gradsync/{label}/{mix}/{strat}", t * 1e6,
-                    f"speedup={t_leaf / t:.2f}x;bucket_bytes="
+                    f"speedup={t_leaf / max(t, 1e-12):.2f}x;bucket_bytes="
                     f"{bucket_bytes};buckets={len(buckets)}")
-            results[(label, mix)] = (n_levels, t_leaf, t_bucket, t_pipe)
+            results[(label, mix)] = (n_levels, t_leaf, t_bucket, t_pipe,
+                                     t_overlap, len(buckets))
 
-    for (label, mix), (n_levels, t_leaf, t_bucket, t_pipe) in \
-            results.items():
+    for (label, mix), (n_levels, t_leaf, t_bucket, t_pipe, t_overlap,
+                       n_buckets) in results.items():
         assert t_pipe <= t_leaf, (
             f"{label}/{mix}: bucketed+pipelined {t_pipe:.6f}s worse than "
             f"leaf-sequential {t_leaf:.6f}s")
         assert t_pipe <= t_bucket, (
             f"{label}/{mix}: pipelining made the bucketed schedule "
             f"slower ({t_pipe:.6f}s vs {t_bucket:.6f}s)")
+        # overlapping with backward compute can only EXPOSE less
+        # communication than the post-backward pipeline pays in full
+        assert t_overlap <= t_pipe, (
+            f"{label}/{mix}: backward-overlapped exposed comm "
+            f"{t_overlap:.6f}s worse than pipelined {t_pipe:.6f}s")
         if n_levels == 3:
             # the acceptance bar: on the full 3-tier stack the pipeline
-            # must be STRICTLY faster than the shipped per-leaf path
+            # must be STRICTLY faster than the shipped per-leaf path,
+            # and hiding buckets under backward compute must strictly
+            # beat paying the whole pipelined sync afterwards
             assert t_pipe < t_leaf, (
                 f"{label}/{mix}: no pipelining win on 3 levels "
                 f"({t_pipe:.6f}s vs {t_leaf:.6f}s)")
+            if n_buckets > 1:
+                # a single bucket has nothing to overlap under (its own
+                # compute must finish first): exposed == pipelined there
+                assert t_overlap < t_pipe, (
+                    f"{label}/{mix}: no backward-overlap win on 3 "
+                    f"levels ({t_overlap:.6f}s vs {t_pipe:.6f}s)")
     return results
 
 

@@ -32,8 +32,36 @@ from repro.core.collectives.schedule import (  # noqa: F401
     pack_buckets,
 )
 
-__all__ = ["Bucket", "BucketLayout", "BucketSlot", "coalesce_bytes",
-           "pack_buckets"]
+__all__ = ["Bucket", "BucketLayout", "BucketSlot", "RELEASE_KEY",
+           "coalesce_bytes", "layer_slice_struct", "pack_buckets",
+           "split_release_tree"]
+
+# The top-level gradient-tree key whose leaves are stacked per layer
+# (leading axis = layer) and released layer-by-layer during backward.
+# grad_release tags are ("layers", i); tag[0] must equal this key.
+RELEASE_KEY = "layers"
+
+
+def split_release_tree(tree, key: str = RELEASE_KEY):
+    """Split a gradient tree into (per-layer released subtree, residual).
+
+    The released subtree is ``tree[key]`` — stacked per-layer leaves
+    whose shared leading axis is the layer count — and the residual is
+    everything else (embeddings, final norm, ...), synced post-backward.
+    Returns ``(None, tree)`` when the tree has no release key."""
+    if not isinstance(tree, dict) or key not in tree:
+        return None, tree
+    rest = {k: v for k, v in tree.items() if k != key}
+    return tree[key], rest
+
+
+def layer_slice_struct(layers):
+    """ShapeDtypeStructs of ONE layer's slice of a stacked subtree
+    (leading layer axis dropped) — what each release event hands the
+    sink, used to plan the per-release bucket layout without tracing."""
+    return jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(tuple(a.shape[1:]), a.dtype),
+        layers)
 
 
 @dataclasses.dataclass(frozen=True)

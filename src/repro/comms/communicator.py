@@ -29,7 +29,11 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 import jax
 import numpy as np
 
-from repro.comms.bucketing import BucketLayout
+from repro.comms.bucketing import (
+    BucketLayout,
+    layer_slice_struct,
+    split_release_tree,
+)
 from repro.comms.report import PlanEntry, PlanReport
 from repro.comms.request import CollectiveRequest
 from repro.core.analytical.hierarchy import padded_allreduce_schedule
@@ -43,6 +47,7 @@ from repro.core.collectives.hierarchical import (
 )
 from repro.core.collectives.schedule import (
     build_pipeline_schedule,
+    build_stream_schedule,
     execute_pipelined,
 )
 #: gradient-sync mesh axes, innermost tier first — a mesh carrying any of
@@ -51,6 +56,37 @@ from repro.core.collectives.schedule import (
 from repro.core.topology.model import SYNC_AXES
 
 _XLA_SPEC = CollectiveSpec("xla", 1)
+
+#: double-buffered permute streams per tier in the backward-overlapped
+#: stream schedule — two in-flight chains so one bucket's stall doesn't
+#: idle the tier (HiCCL striped pipelines)
+N_STREAMS = 2
+
+
+class _ReleaseSink:
+    """Adopts gradient-release events during the backward trace.
+
+    Installed via ``models.layers.release_scope`` around the traced
+    ``value_and_grad``: each per-layer release point hands its cotangent
+    here the moment backward compute materializes it, and the sink syncs
+    it through the communicator's full tuned composition immediately
+    (sum only — the data-parallel mean divides once at the end in
+    ``sync_gradients_streamed``). The cotangent keeps the primal's shape
+    (reduce-scatter in, all-reduce at the top, all-gather back out), so
+    the custom_vjp contract holds and every rank's layer gradient
+    arrives already reduced. ``events`` records the tags in release
+    (backward) order — the deepest layer first."""
+
+    def __init__(self, comm: "Communicator", bucket_bytes: int = 0,
+                 n_streams: int = N_STREAMS):
+        self.comm = comm
+        self.bucket_bytes = int(bucket_bytes or 0)
+        self.n_streams = int(n_streams)
+        self.events: List[Tuple] = []
+
+    def release(self, tag, ct):
+        self.events.append(tag)
+        return self.comm._sync_release(ct, self.bucket_bytes)
 
 
 def _supported(op: str, algorithm: str) -> bool:
@@ -578,7 +614,8 @@ class Communicator:
             else int(bucket_bytes)
 
     def explain_gradients(self, tree, *,
-                          bucket_bytes: Optional[int] = None) -> PlanReport:
+                          bucket_bytes: Optional[int] = None,
+                          overlap_backward: bool = False) -> PlanReport:
         """The gradient-sync plan, exactly as it will execute.
 
         Without bucketing (no tuned schedule in the artifact and no
@@ -587,7 +624,14 @@ class Communicator:
         plus one psum hop per remaining sync tier. With bucketing: the
         pipelined schedule's entries in ISSUE order — bucket k's inward
         phase between bucket k-1's deeper phases — each tagged with its
-        fusion bucket and pipeline step."""
+        fusion bucket and pipeline step. With ``overlap_backward``: the
+        backward-overlapped stream schedule — one release event per
+        layer in backward order (deepest layer first), each entry tagged
+        ``release=``/``stream=``/``step=`` from the double-buffered
+        stream DAG, followed by the residual (embeddings, ...) sync."""
+        if overlap_backward:
+            return self._explain_gradients_streamed(
+                tree, self._resolve_bucket_bytes(bucket_bytes))
         bb = self._resolve_bucket_bytes(bucket_bytes)
         if not bb:
             entries: List[PlanEntry] = []
@@ -776,3 +820,122 @@ class Communicator:
             for i, f in zip(active, out):
                 flats[i] = f
         return layout.unflatten(flats)
+
+    # -- backward-overlapped (streamed) gradient sync -----------------------
+    def release_sink(self, bucket_bytes: Optional[int] = None,
+                     n_streams: int = N_STREAMS) -> _ReleaseSink:
+        """A fresh gradient-release sink for one backward-overlapped
+        step trace: install it with ``models.layers.release_scope``
+        around the ``value_and_grad`` call, then finish with
+        :meth:`sync_gradients_streamed`."""
+        return _ReleaseSink(self, self._resolve_bucket_bytes(bucket_bytes),
+                            n_streams)
+
+    def _sync_release(self, grads, bucket_bytes: int):
+        """Sync ONE release event's cotangent (sum, no mean) through the
+        full shape-preserving composition — the custom_vjp cotangent
+        must keep the primal's shape, so the all-gather returns every
+        rank the reduced layer slice. ``bucket_bytes <= 0`` fuses the
+        whole layer into one bucket per dtype. Non-float cotangents
+        (float0 from integer leaves) pass through untouched."""
+        flat, treedef = jax.tree.flatten(grads)
+        idx = [i for i, leaf in enumerate(flat)
+               if np.issubdtype(leaf.dtype, np.inexact)]
+        if len(idx) == len(flat):
+            return self._sync_gradients_bucketed(
+                grads, int(bucket_bytes), mean=False, denom=1)
+        sub = {str(i): flat[i] for i in idx}
+        synced = self._sync_gradients_bucketed(
+            sub, int(bucket_bytes), mean=False, denom=1)
+        for i in idx:
+            flat[i] = synced[str(i)]
+        return jax.tree.unflatten(treedef, flat)
+
+    def sync_gradients_streamed(self, grads, sink: Optional[_ReleaseSink],
+                                *, mean: bool = True,
+                                bucket_bytes: Optional[int] = None):
+        """Finish a backward-overlapped gradient sync.
+
+        The release events already reduced the per-layer leaves during
+        backward compute (sum, full composition); this divides them by
+        the data-parallel size and syncs the RESIDUAL (embeddings,
+        final norm — everything outside the released top-level keys)
+        through the ordinary :meth:`sync_gradients` path. With no sink
+        or no recorded events (a scanned model never hits a release
+        point), falls back to the plain full-tree sync — numerics are
+        identical either way, only the overlap is lost."""
+        if sink is None or not sink.events:
+            return self.sync_gradients(grads, mean=mean,
+                                       bucket_bytes=bucket_bytes)
+        denom = self._data_parallel_size()
+        released_keys = {t[0] for t in sink.events}
+        released = {k: v for k, v in grads.items() if k in released_keys}
+        residual = {k: v for k, v in grads.items()
+                    if k not in released_keys}
+        if mean and denom > 1:
+            released = jax.tree.map(lambda g: g / denom, released)
+        if residual:
+            residual = self.sync_gradients(residual, mean=mean,
+                                           bucket_bytes=bucket_bytes)
+        return {**released, **residual}
+
+    def _explain_gradients_streamed(self, tree, bucket_bytes: int,
+                                    n_streams: int = N_STREAMS
+                                    ) -> PlanReport:
+        """The backward-overlapped plan, in executed trace order: per
+        release event (layer L-1 first — backward order) the release's
+        full phase chain in its local pipeline order, tagged with the
+        global stream schedule's (release, stream, step); then the
+        residual sync's entries. The per-release collective specs are
+        resolved through exactly the lookup path ``_sync_release``
+        dispatches, so plan == executed for the streamed path too."""
+        layers, residual = split_release_tree(tree)
+        if layers is None:
+            return self.explain_gradients(tree, bucket_bytes=bucket_bytes)
+        if self._inner_axis is None:
+            raise ValueError("sync_gradients needs a mesh with a 'data' "
+                             "axis")
+        n_layers = int(jax.tree.leaves(layers)[0].shape[0])
+        slice_tree = layer_slice_struct(layers)
+        # every release syncs an identical layer slice, so one local
+        # bucket plan serves all of them
+        layout, active, sched, axes, sizes, keys, hier = \
+            self._bucket_plan(slice_tree, bucket_bytes)
+        elems = [layout.buckets[i].elems for i in active]
+        stream_sched = build_stream_schedule(
+            elems * n_layers, sizes,
+            releases=[r for r in range(n_layers) for _ in active],
+            n_streams=n_streams)
+        by_bp = {(t.bucket, t.phase): t for t in stream_sched.tasks}
+        entries: List[PlanEntry] = []
+        for r in range(n_layers):
+            base = r * len(active)
+            for t in sched.tasks:
+                st = by_bp[(base + t.bucket, t.phase)]
+                bucket = layout.buckets[active[t.bucket]]
+                itemsize = np.dtype(bucket.dtype).itemsize
+                key = keys[t.level]
+                req = CollectiveRequest(
+                    t.op, t.in_elems * itemsize, axis=axes[t.level],
+                    axis_size=sizes[t.level], dtype=bucket.dtype,
+                    level=key if self._policy.kind == "hier" else None)
+                entry = self._level_entry(req, key)
+                entries.append(dataclasses.replace(
+                    entry, bucket=base + t.bucket, step=st.step,
+                    release=r, stream=st.stream))
+            if not hier:
+                for li, bi in enumerate(active):
+                    bucket = layout.buckets[bi]
+                    for outer in self._sync_axes[1:]:
+                        req = CollectiveRequest(
+                            "all_reduce", bucket.nbytes, axis=outer,
+                            axis_size=self.mesh.shape[outer],
+                            dtype=bucket.dtype)
+                        entries.append(PlanEntry(
+                            req, _XLA_SPEC, source="psum",
+                            bucket=base + li, release=r,
+                            stream=(base + li) % n_streams))
+        if jax.tree.leaves(residual):
+            entries.extend(self.explain_gradients(
+                residual, bucket_bytes=bucket_bytes).entries)
+        return PlanReport(entries)

@@ -23,7 +23,10 @@ class PlanEntry:
     ``bucket``/``step`` are set only by the bucketed overlap-pipelined
     gradient sync: which fusion bucket the entry belongs to, and the
     pipeline step it issues in (entries of the same step run on
-    different tiers concurrently)."""
+    different tiers concurrently). ``release``/``stream`` are set only
+    by the backward-overlapped stream schedule: the gradient-release
+    event (backward order — release 0 is the deepest layer) that gates
+    the entry, and the double-buffered permute stream carrying it."""
 
     request: CollectiveRequest
     spec: CollectiveSpec
@@ -31,11 +34,15 @@ class PlanEntry:
     source: str = "xla"           # "xla" | "static" | "table:<name>" | ...
     bucket: Optional[int] = None  # fusion-bucket index (pipelined sync)
     step: Optional[int] = None    # pipeline step (pipelined sync)
+    release: Optional[int] = None  # grad-release event (streamed sync)
+    stream: Optional[int] = None   # permute stream (streamed sync)
 
     def render(self) -> str:
         lvl = f" level={self.level}" if self.level else ""
         pipe = f" bucket={self.bucket} step={self.step}" \
             if self.bucket is not None else ""
+        if self.release is not None:
+            pipe += f" release={self.release} stream={self.stream}"
         return (f"{self.request.op:14s} {self.request.nbytes:>10d} B "
                 f"p={self.request.axis_size:<4d}-> "
                 f"{self.spec.algorithm} segments={self.spec.segments}"
@@ -68,4 +75,5 @@ class PlanReport:
             "algorithm": e.spec.algorithm, "segments": e.spec.segments,
             "level": e.level, "source": e.source,
             "bucket": e.bucket, "step": e.step,
+            "release": e.release, "stream": e.stream,
         } for e in self.entries]

@@ -160,6 +160,54 @@ class CollectiveConfig:
     # artifact's tuned schedule (sequential per-leaf when it carries
     # none), 0 = force the per-leaf path even over a schedule-carrying
     # artifact
+    overlap_backward: bool = False  # backward-overlapped streamed sync:
+    # per-layer custom_vjp release points issue each layer's tier-0
+    # reduce-scatter during backward compute (unrolls the layer stack;
+    # --overlap-backward on the train CLI)
+
+
+class CollectiveConfigError(ValueError):
+    """An unsupported collective-config combination, detected at
+    config/CLI parse time (not mid-trace) with the flags to change."""
+
+
+def validate_collectives(coll: "CollectiveConfig",
+                         parallel: "ParallelConfig",
+                         tuned: Optional[bool] = None) -> None:
+    """Reject collective/parallel combinations the step builder cannot
+    execute, naming the flags that conflict. ``tuned`` is whether the
+    resolved communicator takes the explicit tuned-sync path (defaults
+    to what the config alone implies: a non-xla algorithm, a decision
+    artifact, or a fusion-bucket budget)."""
+    if tuned is None:
+        tuned = (coll.algorithm != "xla" or coll.decision is not None
+                 or bool(coll.bucket_bytes))
+    if tuned and parallel.shard_params_over_data:
+        raise CollectiveConfigError(
+            "tuned gradient sync and FSDP param sharding are mutually "
+            "exclusive (DESIGN.md §3): tuned sync all-reduces full "
+            "gradients inside shard_map, FSDP reduce-scatters per-shard. "
+            "Drop --fsdp (ParallelConfig.shard_params_over_data) or run "
+            "the XLA path (--collective xla, no --tuning-table / "
+            "--bucket-mb).")
+    if coll.overlap_backward and parallel.shard_params_over_data:
+        raise CollectiveConfigError(
+            "--overlap-backward requires non-FSDP params: release points "
+            "sync full per-layer gradients, FSDP shards them. Drop "
+            "--fsdp (ParallelConfig.shard_params_over_data) or "
+            "--overlap-backward.")
+    if coll.overlap_backward and not tuned:
+        raise CollectiveConfigError(
+            "--overlap-backward needs the tuned gradient-sync path to "
+            "issue release-point collectives: pass --tuning-table, "
+            "--collective <algorithm>, or --bucket-mb (the plain XLA "
+            "path has no explicit sync to overlap).")
+    if coll.overlap_backward and coll.overlap_microbatches > 1:
+        raise CollectiveConfigError(
+            "--overlap-backward and --overlap-microbatches are mutually "
+            "exclusive: release points would sync partial gradients once "
+            "per microbatch (k x the communication). Set "
+            "--overlap-microbatches 1 or drop --overlap-backward.")
 
 
 @dataclass(frozen=True)

@@ -221,6 +221,113 @@ def overlapped_allreduce_time(
                                          phase_cost)[0]
 
 
+def backward_overlapped_schedule(
+    sizes: Sequence[int],
+    bucket_elems: Sequence[int],
+    phase_cost,
+    *,
+    releases: Optional[Sequence[int]] = None,
+    ready_times: Optional[Sequence[float]] = None,
+    n_streams: int = 2,
+):
+    """Timed walk of the backward-overlapped stream schedule:
+    ``(makespan_seconds, timed)``, measured from backward-compute start.
+
+    The compute-overlapped counterpart of
+    `overlapped_allreduce_schedule`: the tasks come from the SAME
+    ``build_stream_schedule`` the executor issues and the plan renderer
+    tags, and two things change in the timing walk —
+
+      * each tier owns ``n_streams`` serial wires (double-buffered
+        permute streams), a task occupying the ``(level, stream)`` wire
+        its bucket was scheduled onto;
+      * a bucket's first phase has a READY FLOOR:
+        ``ready_times[releases[k]]`` is the wall-clock moment backward
+        compute materializes that release's gradients, so communication
+        overlaps compute instead of starting after it — the exposed
+        communication is ``max(0, makespan - total_compute)`` rather
+        than the full comm time.
+
+    ``timed`` is ``[(task, start, finish)]`` in issue order. With
+    ``n_streams=1`` and zero ready times this reproduces
+    `overlapped_allreduce_schedule` exactly.
+    """
+    from repro.core.collectives.schedule import build_stream_schedule
+
+    sched = build_stream_schedule(bucket_elems, sizes, releases=releases,
+                                  n_streams=n_streams)
+    wire_free: Dict[Tuple[int, int], float] = {}
+    seg_finish: Dict[Tuple[int, int], List[float]] = {}
+    timed = []
+    # The stream tasks are listed bucket-major (release order) but ISSUE
+    # in step order — walking them bucket-major would let an early
+    # bucket's late phases grab a wire before a later bucket's first
+    # phase, serializing the pipeline the schedule explicitly permits.
+    for t in sorted(sched.tasks, key=lambda t: (t.step, t.bucket,
+                                                t.phase)):
+        total, nseg = phase_cost(t.level, t.op, t.in_elems)
+        nseg = max(1, int(nseg))
+        d = total / nseg
+        prev = seg_finish.get((t.bucket, t.phase - 1))
+        free = wire_free.get((t.level, t.stream), 0.0)
+        floor = 0.0
+        if t.phase == 0 and ready_times is not None:
+            floor = float(ready_times[t.release])
+        finishes: List[float] = []
+        start0 = None
+        for s in range(nseg):
+            ready = floor
+            if prev is not None:
+                idx = min(len(prev) - 1, ((s + 1) * len(prev) - 1) // nseg)
+                ready = max(ready, prev[idx])
+            start = max(free, ready)
+            if start0 is None:
+                start0 = start
+            free = start + d
+            finishes.append(free)
+        wire_free[(t.level, t.stream)] = free
+        seg_finish[(t.bucket, t.phase)] = finishes
+        timed.append((t, start0 or 0.0, free))
+    makespan = max((fin for _, _, fin in timed), default=0.0)
+    return makespan, timed
+
+
+def backward_overlapped_time(
+    levels: Sequence[Tuple[int, CommModel]],
+    bucket_bytes: Sequence[float],
+    compute_times: Sequence[float],
+    methods: Optional[Dict[Tuple[int, str], Tuple[str, int]]] = None,
+    *,
+    n_streams: int = 2,
+    gamma: float = VPU_GAMMA,
+) -> float:
+    """Predicted makespan (from backward start) of the
+    backward-overlapped streamed sync: bucket k (release order — the
+    deepest layer's gradients first) becomes ready once
+    ``compute_times[0..k]`` of backward compute have elapsed, then its
+    phase chain flows through the double-buffered stream wires. The
+    exposed communication is ``makespan - sum(compute_times)`` when
+    positive — comm fully hidden under compute costs nothing."""
+    assert len(compute_times) == len(bucket_bytes), \
+        "one backward-compute slice per release bucket"
+    ready, acc = [], 0.0
+    for c in compute_times:
+        acc += float(c)
+        ready.append(acc)
+    sizes = [p for p, _ in levels]
+
+    def phase_cost(level, op, nbytes):
+        p, model = levels[level]
+        t, (_, segs) = _phase(op, model, p, float(nbytes),
+                              (methods or {}).get((level, op)), gamma)
+        return t, segs
+
+    return backward_overlapped_schedule(
+        sizes, [int(b) for b in bucket_bytes], phase_cost,
+        releases=list(range(len(bucket_bytes))), ready_times=ready,
+        n_streams=n_streams)[0]
+
+
 def flat_vs_hierarchical(
     flat_model: CommModel,
     levels: Sequence[Tuple[int, CommModel]],

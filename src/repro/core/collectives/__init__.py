@@ -1,20 +1,16 @@
 """Collective algorithms, hierarchical compositions, and the stable
 dispatch value types.
 
-Tuned dispatch flows through `repro.comms.Communicator`; the old
-decision-source plumbing (`DecisionSource`, `StaticDecision`,
-`TableDecision`, `XLA_DECISION`, `sync_gradients`,
-`sync_gradients_reduce_scatter`) is deprecated at this package level too
-— accessing those names emits `DeprecationWarning` for one release, same
-as via ``repro.core.collectives.api``.
+Tuned dispatch flows through `repro.comms.Communicator`. The old
+decision-source aliases (`TableDecision`, `XLA_DECISION`,
+`sync_gradients`, `sync_gradients_reduce_scatter`) and the
+``repro.core.collectives.api`` module were removed after their
+one-release `DeprecationWarning` window; `DecisionSource` /
+`StaticDecision` stay in ``dispatch`` as the decision protocol the
+topology artifact loaders implement.
 """
 from repro.core.collectives.algorithms import ALGORITHMS, get
-from repro.core.collectives.dispatch import (
-    DEPRECATED_ALIASES,
-    CollectiveSpec,
-    apply_collective,
-    deprecated_getattr,
-)
+from repro.core.collectives.dispatch import CollectiveSpec, apply_collective
 from repro.core.collectives.hierarchical import (
     hierarchical_all_gather,
     hierarchical_all_reduce,
@@ -26,8 +22,17 @@ from repro.core.collectives.hierarchical import (
     sync_gradients_multilevel,
 )
 
-__getattr__ = deprecated_getattr(__name__)
-
-
-def __dir__():
-    return sorted(list(globals()) + list(DEPRECATED_ALIASES))
+__all__ = [
+    "ALGORITHMS",
+    "get",
+    "CollectiveSpec",
+    "apply_collective",
+    "hierarchical_all_gather",
+    "hierarchical_all_reduce",
+    "hierarchical_reduce_scatter",
+    "multilevel_all_gather",
+    "multilevel_all_reduce",
+    "multilevel_reduce_scatter",
+    "sync_gradients_hierarchical",
+    "sync_gradients_multilevel",
+]

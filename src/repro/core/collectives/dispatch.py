@@ -9,45 +9,16 @@ the XLA default.
 This module is an implementation detail of `repro.comms.Communicator` —
 the one tuned-collective entry point — and of the artifact loaders in
 ``repro.core.topology``. Application code (launchers, step builders,
-models, benchmarks) should construct a `Communicator`, not these classes;
-the old public aliases in ``repro.core.collectives.api`` emit
-`DeprecationWarning`.
+models, benchmarks) should construct a `Communicator`, not these classes.
+The deprecated ``repro.core.collectives.api`` aliases (`TableDecision`,
+`XLA_DECISION`, `sync_gradients`, `sync_gradients_reduce_scatter`) were
+removed after their one-release deprecation window.
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
-from typing import Callable, Optional
-
-import jax
 
 from repro.core.collectives import algorithms as alg
-
-#: the legacy public names both ``repro.core.collectives`` and
-#: ``repro.core.collectives.api`` forward with a DeprecationWarning
-DEPRECATED_ALIASES = ("DecisionSource", "StaticDecision", "TableDecision",
-                      "XLA_DECISION", "sync_gradients",
-                      "sync_gradients_reduce_scatter")
-
-
-def deprecated_getattr(module_name: str):
-    """A module-level ``__getattr__`` that forwards the legacy aliases
-    from here, warning once per access — shared by both public
-    spellings so the deprecation window cannot drift between them."""
-
-    def __getattr__(name):
-        if name in DEPRECATED_ALIASES:
-            warnings.warn(
-                f"{module_name}.{name} is deprecated; construct a "
-                "repro.comms.Communicator instead (it owns decision "
-                "resolution and tuned dispatch). This alias will be "
-                "removed next release.",
-                DeprecationWarning, stacklevel=2)
-            return globals()[name]
-        raise AttributeError(
-            f"module {module_name!r} has no attribute {name!r}")
-
-    return __getattr__
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,20 +45,6 @@ class StaticDecision(DecisionSource):
         return self.spec
 
 
-class TableDecision(DecisionSource):
-    """Wraps any tuner-produced decision function f(op, nbytes, p) -> (algo, segments)."""
-
-    def __init__(self, fn: Callable[[str, int, int], tuple]):
-        self.fn = fn
-
-    def spec_for(self, op, nbytes, axis_size):
-        a, s = self.fn(op, nbytes, axis_size)
-        return CollectiveSpec(a, s).normalized()
-
-
-XLA_DECISION = StaticDecision(CollectiveSpec("xla", 1))
-
-
 def apply_collective(op: str, x, axis: str, axis_size: int,
                      spec: CollectiveSpec, **kw):
     fn = alg.get(op, spec.algorithm)
@@ -95,51 +52,3 @@ def apply_collective(op: str, x, axis: str, axis_size: int,
         return fn(x, axis, axis_size, segments=spec.segments,
                   op=kw.get("reduce_op", "add"))
     return fn(x, axis, axis_size, segments=spec.segments)
-
-
-def sync_gradients(
-    grads,
-    axis: str,
-    axis_size: int,
-    decision: Optional[DecisionSource] = None,
-    *,
-    mean: bool = True,
-):
-    """All-reduce every gradient leaf with its tuned algorithm.
-
-    Must be called inside shard_map (manual over ``axis``).
-    """
-    decision = decision or XLA_DECISION
-
-    def sync_leaf(g):
-        nbytes = g.size * g.dtype.itemsize
-        spec = decision.spec_for("all_reduce", nbytes, axis_size)
-        out = apply_collective("all_reduce", g, axis, axis_size, spec)
-        if mean:
-            out = out / axis_size
-        return out
-
-    return jax.tree.map(sync_leaf, grads)
-
-
-def sync_gradients_reduce_scatter(
-    grads, axis: str, axis_size: int,
-    decision: Optional[DecisionSource] = None, *, mean: bool = True,
-):
-    """ZeRO-style sync: reduce-scatter each leaf (flat 1/p shard per rank).
-
-    Returns a tree of flat shards plus the original shapes; the optimizer can
-    run on shards and all-gather params afterwards (beyond-paper collective
-    schedule exercised in §Perf).
-    """
-    decision = decision or XLA_DECISION
-
-    def sync_leaf(g):
-        nbytes = g.size * g.dtype.itemsize
-        spec = decision.spec_for("reduce_scatter", nbytes, axis_size)
-        out = apply_collective("reduce_scatter", g, axis, axis_size, spec)
-        if mean:
-            out = out / axis_size
-        return out
-
-    return jax.tree.map(sync_leaf, grads)

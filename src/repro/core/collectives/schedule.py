@@ -166,6 +166,96 @@ def build_pipeline_schedule(bucket_elems: Sequence[int],
                             tuple(tasks))
 
 
+@dataclasses.dataclass(frozen=True)
+class StreamTask(SegmentTask):
+    """A `SegmentTask` scheduled onto one of ``n_streams`` double-buffered
+    collective-permute streams, gated on a gradient-release event: the
+    bucket's first phase cannot issue before backward compute has
+    produced its gradients (``release`` = the event's index in backward
+    order), and a stream carries one bucket's phase per tier at a time
+    (the wire edge skips to ``bucket - n_streams``)."""
+
+    stream: int = 0
+    release: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamSchedule(PipelineSchedule):
+    """Readiness-ordered stream schedule. Unlike `PipelineSchedule`,
+    ``tasks`` stay in release-major (bucket-major) order — the executed
+    trace order is each release event's full phase chain, issued inside
+    that layer's backward rule; ``step``/``stream`` are the scheduling
+    metadata the cost model and renderer consume."""
+
+    n_streams: int = 2
+    releases: Tuple[int, ...] = ()
+
+    def render(self, indent: str = "  ") -> str:
+        lines = []
+        for t in self.tasks:
+            lines.append(
+                f"{indent}step {t.step:3d}  release {t.release:3d}  "
+                f"stream {t.stream}  bucket {t.bucket:3d}  tier {t.level}"
+                f"  {t.op:14s} {t.in_elems:>10d} elems")
+        return "\n".join(lines)
+
+
+def build_stream_schedule(bucket_elems: Sequence[int],
+                          sizes: Sequence[int],
+                          *,
+                          releases: Optional[Sequence[int]] = None,
+                          n_streams: int = 2) -> StreamSchedule:
+    """The backward-overlapped stream schedule: ``bucket_elems`` fusion
+    buckets (in release order — backward produces the LAST layer's
+    gradients first, so bucket 0 is the deepest layer), each walking the
+    sequential ``padded_allreduce_schedule`` phases, scheduled onto
+    ``n_streams`` double-buffered streams per tier.
+
+    ``releases[k]`` is the pipeline step at which bucket k's gradients
+    materialize (default: bucket k releases at step k — one layer's
+    backward compute per step). The DAG replaces the pipeline's wire
+    edge ``(k-1, p)`` with ``(k - n_streams, p)``: with two streams a
+    tier keeps two ppermute chains in flight, so a stall in one bucket's
+    chain doesn't idle the tier. The step recurrence is the DAG's
+    longest path with the release event as phase 0's ready floor::
+
+        step[k][0] = max(releases[k], step[k-n_streams][0] + 1)
+        step[k][p] = max(step[k][p-1] + 1, step[k-n_streams][p] + 1)
+
+    With ``n_streams=1`` and ``releases=range`` this degenerates exactly
+    to `build_pipeline_schedule`'s ``step = bucket + phase``. Per bucket
+    the phase list (and therefore every floating-point value) is
+    unchanged.
+    """
+    assert sizes, "need at least one tier"
+    assert n_streams >= 1
+    if releases is None:
+        releases = list(range(len(bucket_elems)))
+    assert len(releases) == len(bucket_elems)
+    tasks: List[StreamTask] = []
+    step: dict = {}
+    for k, elems in enumerate(bucket_elems):
+        for p_idx, (lvl, op, in_e, out_e) in enumerate(
+                padded_allreduce_schedule(list(sizes), int(elems))):
+            deps: List[Tuple[int, int]] = []
+            s = int(releases[k]) if p_idx == 0 else 0
+            if p_idx:
+                deps.append((k, p_idx - 1))           # data edge
+                s = max(s, step[(k, p_idx - 1)] + 1)
+            if k >= n_streams:
+                deps.append((k - n_streams, p_idx))   # wire edge (stream)
+                s = max(s, step[(k - n_streams, p_idx)] + 1)
+            step[(k, p_idx)] = s
+            tasks.append(StreamTask(
+                bucket=k, phase=p_idx, level=lvl, op=op, in_elems=in_e,
+                out_elems=out_e, step=s, deps=tuple(deps),
+                stream=k % n_streams, release=int(releases[k])))
+    return StreamSchedule(tuple(int(s) for s in sizes),
+                          tuple(int(e) for e in bucket_elems),
+                          tuple(tasks), n_streams=int(n_streams),
+                          releases=tuple(int(r) for r in releases))
+
+
 def execute_pipelined(
     buckets,
     schedule: PipelineSchedule,

@@ -25,6 +25,7 @@ from repro.core.topology.tune import (
     optimal_machine_allreduce_time,
     pipelined_sync_time,
     sequential_sync_time,
+    streamed_sync_time,
     tune_overlap_schedule,
     tune_topology,
 )

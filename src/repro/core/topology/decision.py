@@ -166,7 +166,7 @@ class HierarchicalDecision(DecisionSource):
     ``spec_for_level`` is the hierarchical composition's entry point;
     ``spec_for`` (the flat DecisionSource protocol) answers from the
     innermost table, so a HierarchicalDecision drops into any slot a
-    TableDecision fits.
+    flat DecisionSource fits.
     """
 
     def __init__(self, levels: Sequence[Tuple[str, DecisionTable]]):

@@ -19,6 +19,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.analytical.hierarchy import (
     allreduce_phases,
+    backward_overlapped_schedule,
     overlapped_allreduce_schedule,
     padded_allreduce_schedule,
 )
@@ -201,6 +202,37 @@ def pipelined_sync_time(topology: Topology,
         sizes, [int(b) for b in bucket_bytes_list],
         _decided_phase_cost(topology, decision))
     return makespan
+
+
+def streamed_sync_time(topology: Topology,
+                       decision: HierarchicalDecision,
+                       bucket_bytes_list: Sequence[int],
+                       compute_times: Sequence[float],
+                       *, n_streams: int = 2) -> float:
+    """Expected makespan (from backward-compute start) of the
+    backward-overlapped streamed sync: bucket k's phase chain issues
+    once ``compute_times[0..k]`` of backward compute have produced its
+    gradients (release order — the deepest layer first), flowing
+    through ``n_streams`` double-buffered permute wires per tier
+    (``backward_overlapped_schedule`` over the same
+    ``build_stream_schedule`` DAG the executor issues). Per-phase
+    pricing is EXACTLY `pipelined_sync_time`'s, so streamed-vs-pipelined
+    comparisons measure overlap, never a byte-accounting convention."""
+    sizes = [lv.size for lv in topology.levels]
+    makespan, _ = backward_overlapped_schedule(
+        sizes, [int(b) for b in bucket_bytes_list],
+        _decided_phase_cost(topology, decision),
+        releases=list(range(len(bucket_bytes_list))),
+        ready_times=_cumsum(compute_times), n_streams=n_streams)
+    return makespan
+
+
+def _cumsum(xs: Sequence[float]) -> List[float]:
+    out, acc = [], 0.0
+    for x in xs:
+        acc += float(x)
+        out.append(acc)
+    return out
 
 
 def tune_overlap_schedule(

@@ -26,6 +26,7 @@ from repro.configs.base import (
     ModelConfig,
     ParallelConfig,
     ShapeConfig,
+    validate_collectives,
 )
 from repro.models.registry import build_model, train_batch_structs
 from repro.optim import AdamW, cosine_with_warmup
@@ -86,8 +87,16 @@ def build_train_step(
     sh.set_current_mesh(mesh)
     sh.set_seq_sharding(parallel.seq_shard_activations)
     comm = communicator or Communicator.from_config(coll, mesh)
+    tuned = comm.is_tuned
+    validate_collectives(coll, parallel, tuned=tuned)
+    overlap = tuned and coll.overlap_backward
     ep_axis = "model" if (cfg.family == "moe"
                           and sh.model_size(mesh) > 1) else None
+    # MoE + tuned sync unify into ONE shard_map program: the model runs
+    # inside the manual region, manual over the data axes AND the
+    # expert-parallel axis, so the nested expert shard_map is replaced by
+    # plain axis collectives (no more mutual exclusion)
+    ep_manual = tuned and ep_axis is not None
     api = build_model(
         cfg,
         ep_axis=ep_axis,
@@ -95,9 +104,13 @@ def build_train_step(
         remat=(parallel.remat != "none"),
         attn_impl="ref" if accounting else
         ("xla" if jax.default_backend() != "tpu" else "auto"),
-        unroll=accounting,
+        # per-layer release points need the unrolled layer stack: a scan
+        # traces its body once, so its collectives can't overlap across
+        # iterations
+        unroll=accounting or overlap,
         loss_chunk=(1 << 30) if accounting else 512,
         a2a_algorithm=comm,
+        ep_manual=ep_manual,
     )
     opt = AdamW(lr=lr)
 
@@ -110,12 +123,7 @@ def build_train_step(
     ospecs = type(opt_s)(step=P(), mu=pspecs, nu=pspecs)
     bspecs = sh.batch_specs(batch_s, mesh, shape)
 
-    tuned = comm.is_tuned
     dpx = sh.dp_axes(mesh)
-
-    if tuned and parallel.shard_params_over_data:
-        raise ValueError("tuned gradient sync requires non-FSDP params "
-                         "(DESIGN.md §3); use algorithm='xla' with FSDP")
 
     def lr_scale(step):
         return cosine_with_warmup(step, warmup_steps=warmup_steps,
@@ -167,18 +175,55 @@ def build_train_step(
                 grads, opt_state, params, lr_scale=lr_scale(opt_state.step))
             return new_params, new_opt, {"loss": loss, **aux}
     else:
-        # partial-manual shard_map over the data axes (up to three tiers:
-        # "dcn" > "pod" > "data"): per-shard backward, tuned gradient
-        # sync through the Communicator — per-leaf flat, psum-topped, or
-        # the full N-level hierarchical composition; with a fusion-bucket
-        # budget (CollectiveConfig.bucket_bytes / the artifact's tuned
-        # schedule) the leaves coalesce into buckets that
-        # overlap-pipeline across the tiers — then a local optimizer
-        # step on replicated params
+        # ONE shard_map program end to end: model forward/backward AND the
+        # tuned gradient sync run inside the manual region (up to three
+        # data tiers "dcn" > "pod" > "data"; plus the expert-parallel
+        # "model" axis for MoE, whose all-to-all becomes a plain axis
+        # collective — no nested shard_map). Gradient sync through the
+        # Communicator: per-leaf flat, psum-topped, or the full N-level
+        # hierarchical composition; a fusion-bucket budget coalesces
+        # leaves into buckets that overlap-pipeline across tiers; with
+        # --overlap-backward, per-layer custom_vjp release points hand
+        # each layer's gradients to the release sink DURING backward
+        # compute (bucket k's tier-0 reduce-scatter under layer k-1's
+        # backward), and `sync_gradients_streamed` finishes the residual
+        # — then a local optimizer step on replicated params.
+        from repro.models import layers as L
+
+        manual_axes = set(dpx) | ({ep_axis} if ep_manual else set())
+
+        def ep_correct(grads, params):
+            """Fix the expert-parallel replica factor. Inside the manual
+            region the non-expert compute is replicated over ``ep_axis``
+            while each rank's sequence chunk feeds the expert block
+            through collectives, so the per-rank backward yields the
+            gradient of the SUM of the tp replica losses: expert-shard
+            grads carry a clean factor tp, and replicated-param grads
+            differ per rank (each sees only its own chunk's expert-path
+            contribution). pmean over ``ep_axis`` restores the
+            replicated grads exactly (sum over ranks = tp x the true
+            gradient); expert shards just divide by tp."""
+            tp = compat.axis_size(ep_axis)
+            especs = sh.ep_param_specs(params, ep_axis)
+            return jax.tree.map(
+                lambda g, s: g / tp if s != P()
+                else jax.lax.pmean(g, ep_axis), grads, especs)
+
         def fn(params, opt_state, batch):
             def inner(params, opt_state, batch):
-                (loss, aux), grads = grad_fn(params, batch)
-                grads = comm.sync_gradients(grads, mean=True)
+                if overlap:
+                    sink = comm.release_sink(coll.bucket_bytes)
+                    with L.release_scope(sink):
+                        (loss, aux), grads = grad_fn(params, batch)
+                    if ep_manual:
+                        grads = ep_correct(grads, params)
+                    grads = comm.sync_gradients_streamed(grads, sink,
+                                                         mean=True)
+                else:
+                    (loss, aux), grads = grad_fn(params, batch)
+                    if ep_manual:
+                        grads = ep_correct(grads, params)
+                    grads = comm.sync_gradients(grads, mean=True)
                 loss = jax.lax.pmean(loss, dpx)
                 aux = jax.tree.map(lambda v: jax.lax.pmean(v, dpx), aux)
                 new_params, new_opt = opt.update(
@@ -186,16 +231,19 @@ def build_train_step(
                     lr_scale=lr_scale(opt_state.step))
                 return new_params, new_opt, {"loss": loss, **aux}
 
-            rep = jax.tree.map(lambda _: P(), params)
-            repo = type(opt_state)(step=P(),
-                                   mu=jax.tree.map(lambda _: P(), params),
-                                   nu=jax.tree.map(lambda _: P(), params))
+            if ep_manual:
+                # expert weights enter split over the ep axis (matching
+                # their storage sharding); everything else replicated
+                pin = sh.ep_param_specs(params, ep_axis)
+            else:
+                pin = jax.tree.map(lambda _: P(), params)
+            repo = type(opt_state)(step=P(), mu=pin, nu=pin)
             bspec_local = sh.batch_specs(batch, mesh, shape)
             return compat.shard_map(
                 inner, mesh=mesh,
-                in_specs=(rep, repo, bspec_local),
-                out_specs=(rep, repo, P()),
-                axis_names=set(dpx), check_vma=False,
+                in_specs=(pin, repo, bspec_local),
+                out_specs=(pin, repo, P()),
+                axis_names=manual_axes, check_vma=False,
             )(params, opt_state, batch)
 
     args = (params_s, opt_s, batch_s)

@@ -64,6 +64,13 @@ def main():
                          "under tier i). Default: the artifact's tuned "
                          "schedule when it carries one; 0 forces the "
                          "sequential per-leaf path")
+    ap.add_argument("--overlap-backward", action="store_true",
+                    help="backward-overlapped gradient sync: per-layer "
+                         "custom_vjp release points issue each layer's "
+                         "tier-0 reduce-scatter DURING backward compute, "
+                         "on double-buffered permute streams (unrolls the "
+                         "layer stack; needs a tuned sync path — "
+                         "--tuning-table / --collective / --bucket-mb)")
     ap.add_argument("--topology", default=None,
                     help="network hierarchy: a 'PODSxDATA' spec (e.g. 2x4),"
                          " a 3-tier 'DCNxPODSxDATA' spec (e.g. 2x2x2), or "
@@ -155,7 +162,16 @@ def main():
                   f"fan-out {lv.size}): launch={lv.profile.launch:.2e}s "
                   f"byte_time={lv.profile.byte_time:.2e}s/B")
     coll = CollectiveConfig(algorithm=args.collective, decision=table_path,
-                            bucket_bytes=comm.bucket_bytes)
+                            bucket_bytes=comm.bucket_bytes,
+                            overlap_backward=args.overlap_backward)
+    from repro.configs.base import CollectiveConfigError, \
+        validate_collectives
+    try:
+        validate_collectives(coll, parallel, tuned=comm.is_tuned)
+    except CollectiveConfigError as e:
+        raise SystemExit(f"invalid flags: {e}")
+    if args.overlap_backward:
+        print("gradient sync: backward-overlapped release streams")
 
     fn, _, in_sh, out_sh, donate = build_train_step(
         cfg, shape, parallel, coll, mesh, lr=args.lr,
@@ -173,8 +189,13 @@ def main():
     print(f"arch={cfg.name} devices={jax.device_count()} "
           f"mesh={dict(mesh.shape)} collective={coll_desc}")
     if args.explain:
-        print("gradient-sync plan (per leaf):")
-        print(comm.explain_gradients(params).render())
+        if args.overlap_backward:
+            print("gradient-sync plan (backward-overlapped streams):")
+            print(comm.explain_gradients(
+                params, overlap_backward=True).render())
+        else:
+            print("gradient-sync plan (per leaf):")
+            print(comm.explain_gradients(params).render())
     t_start = time.time()
     for i in range(args.steps):
         batch = jax.device_put(

@@ -6,6 +6,8 @@ All layers are plain functions over parameter pytrees so they compose with
 """
 from __future__ import annotations
 
+import contextlib
+from functools import partial
 from typing import Optional
 
 import jax
@@ -31,23 +33,82 @@ def split_keys(key, n):
 
 
 # ---------------------------------------------------------------------------
+# gradient release points
+# ---------------------------------------------------------------------------
+# A release point is an identity on the forward pass that, on the backward
+# pass, hands the cotangent of one layer's parameters to an installed sink
+# (repro.comms.communicator._ReleaseSink) the moment it materializes —
+# bucket k's tier-0 reduce-scatter issues while layer k-1's backward
+# compute is still running, instead of after the whole tree. With no sink
+# installed the tree is returned untouched (no custom_vjp node is traced
+# at all), so the unhooked backward is bit-identical by construction.
+_RELEASE_SINK = None
+
+
+@contextlib.contextmanager
+def release_scope(sink):
+    """Install ``sink`` as the active gradient-release sink for the
+    dynamic extent of the block (trace time: the context must enclose the
+    forward trace — value_and_grad pulls the backward trace inside it)."""
+    global _RELEASE_SINK
+    prev = _RELEASE_SINK
+    _RELEASE_SINK = sink
+    try:
+        yield sink
+    finally:
+        _RELEASE_SINK = prev
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _grad_release(tag, sink, tree):
+    return tree
+
+
+def _grad_release_fwd(tag, sink, tree):
+    return tree, None
+
+
+def _grad_release_bwd(tag, sink, _res, ct):
+    return (sink.release(tag, ct),)
+
+
+_grad_release.defvjp(_grad_release_fwd, _grad_release_bwd)
+
+
+def grad_release(tag, tree):
+    """Mark ``tree`` (one layer's parameter slice) as a gradient-release
+    boundary tagged ``tag`` (e.g. ``("layers", i)`` — ``tag[0]`` is the
+    top-level tree key the released leaves live under). Identity unless a
+    sink is installed via :func:`release_scope`."""
+    sink = _RELEASE_SINK
+    if sink is None:
+        return tree
+    return _grad_release(tag, sink, tree)
+
+
+# ---------------------------------------------------------------------------
 # layer stacking
 # ---------------------------------------------------------------------------
 def layer_scan(body, carry, xs, *, unroll: bool = False):
     """lax.scan over stacked layer params, or a literal python unroll.
 
-    The unrolled form exists for the dry-run's cost accounting: XLA's
+    The unrolled form exists for the dry-run's cost accounting (XLA's
     HloCostAnalysis counts a while-loop body ONCE regardless of trip count,
-    so scanned models under-report flops/bytes/collective traffic by ~L x.
-    The dry-run lowers an unrolled variant at two small depths and
-    extrapolates (launch/dryrun.py).
+    so scanned models under-report flops/bytes/collective traffic by ~L x;
+    launch/dryrun.py lowers an unrolled variant at two small depths and
+    extrapolates) and for backward-overlapped gradient sync: a scan traces
+    its body once, so per-layer release points require the unrolled form —
+    each layer's parameter slice passes through :func:`grad_release` with
+    tag ``("layers", i)``, a no-op unless a release sink is installed.
     """
     if not unroll:
         return jax.lax.scan(body, carry, xs)
     L = jax.tree_util.tree_leaves(xs)[0].shape[0]
     ys = []
     for i in range(L):
-        carry, y = body(carry, jax.tree.map(lambda a: a[i], xs))
+        sl = jax.tree.map(lambda a: a[i], xs)
+        sl = grad_release(("layers", i), sl)
+        carry, y = body(carry, sl)
         ys.append(y)
     if all(y is None for y in ys):
         return carry, None

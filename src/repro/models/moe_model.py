@@ -34,9 +34,34 @@ def init_params(key, cfg: ModelConfig, dtype=jnp.float32):
 
 
 def _moe_apply(h, mp, cfg, *, ep_axis, mesh, compute_dtype,
-               a2a_algorithm="xla"):
+               a2a_algorithm="xla", ep_manual=False):
     if ep_axis is None:
         return moe_block(h, mp, cfg, ep_axis=None, compute_dtype=compute_dtype)
+    if ep_manual:
+        # Already inside the ONE manual shard_map program (manual over the
+        # data axes AND ep_axis): no nested shard_map. Reproduce the nested
+        # path's dspec exactly — sequence sharded over ep_axis — by slicing
+        # this rank's chunk, running the expert block on its LOCAL experts
+        # (the outer program's in_specs split E over ep_axis, matching the
+        # nested espec), and gathering the sequence back. Per chunk the
+        # routing, dispatch and expert math are the same ops on the same
+        # values, so the two paths are bit-identical; the MoE all-to-all is
+        # now a plain axis collective inside the one program, free to
+        # overlap expert compute.
+        from repro import compat
+        tp = compat.axis_size(ep_axis)
+        S = h.shape[1]
+        assert S % tp == 0, \
+            f"seq {S} not divisible by expert-parallel axis {tp}"
+        idx = jax.lax.axis_index(ep_axis)
+        hh = jax.lax.dynamic_slice_in_dim(h, idx * (S // tp), S // tp,
+                                          axis=1)
+        out, aux = moe_block(hh, mp, cfg, ep_axis=ep_axis,
+                             a2a_algorithm=a2a_algorithm,
+                             compute_dtype=compute_dtype)
+        aux = jax.tree.map(lambda v: jax.lax.pmean(v, ep_axis), aux)
+        out = jax.lax.all_gather(out, ep_axis, axis=1, tiled=True)
+        return out, aux
     from jax.sharding import PartitionSpec as P
 
     dspec = P(tuple(a for a in ("pod", "data") if a in mesh.axis_names),
@@ -61,7 +86,8 @@ def _moe_apply(h, mp, cfg, *, ep_axis, mesh, compute_dtype,
 
 
 def _layer(x, lp, cfg, positions, *, window, kv, ep_axis, mesh,
-           compute_dtype, attn_impl, a2a_algorithm="xla", return_kv=False):
+           compute_dtype, attn_impl, a2a_algorithm="xla", ep_manual=False,
+           return_kv=False):
     h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
     attn, new_kv = L.attention_block(
         h, lp["attn"], cfg, positions, causal=True, window=window,
@@ -71,7 +97,7 @@ def _layer(x, lp, cfg, positions, *, window, kv, ep_axis, mesh,
     h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
     y, aux = _moe_apply(h, lp["moe"], cfg, ep_axis=ep_axis, mesh=mesh,
                         compute_dtype=compute_dtype,
-                        a2a_algorithm=a2a_algorithm)
+                        a2a_algorithm=a2a_algorithm, ep_manual=ep_manual)
     from repro.parallel.sharding import constrain_residual
     return constrain_residual(x + y), new_kv, aux
 
@@ -79,6 +105,9 @@ def _layer(x, lp, cfg, positions, *, window, kv, ep_axis, mesh,
 def forward(params, embeds, cfg: ModelConfig, *, window=0, ep_axis=None,
             mesh=None, compute_dtype=jnp.bfloat16, attn_impl="auto",
             a2a_algorithm="xla",  # name or repro.comms.Communicator
+            ep_manual: bool = False,  # expert parallelism rides an ALREADY
+            # manual outer shard_map (the one-program training step)
+            # instead of nesting its own
             remat: bool = False, unroll: bool = False):
     S = embeds.shape[1]
     positions = jnp.arange(S)
@@ -87,7 +116,7 @@ def forward(params, embeds, cfg: ModelConfig, *, window=0, ep_axis=None,
         y, _, aux = _layer(x, lp, cfg, positions, window=window, kv=None,
                            ep_axis=ep_axis, mesh=mesh,
                            compute_dtype=compute_dtype, attn_impl=attn_impl,
-                           a2a_algorithm=a2a_algorithm)
+                           a2a_algorithm=a2a_algorithm, ep_manual=ep_manual)
         return y, aux
 
     if remat:

@@ -46,6 +46,9 @@ def build_model(
     unroll: bool = False,
     loss_chunk: int = 512,
     a2a_algorithm="xla",  # algorithm name or a repro.comms.Communicator
+    ep_manual: bool = False,  # MoE expert parallelism inside an ALREADY
+    # manual outer shard_map (the one-program training step) instead of
+    # nesting its own shard_map
 ) -> ModelAPI:
     mod = _FAMILY[cfg.family]
     fkw: dict = {"compute_dtype": compute_dtype, "remat": remat,
@@ -60,6 +63,7 @@ def build_model(
         fkw["ep_axis"] = ep_axis
         fkw["mesh"] = mesh
         fkw["a2a_algorithm"] = a2a_algorithm
+        fkw["ep_manual"] = ep_manual
 
     loss = functools.partial(mod.loss_fn, cfg=cfg, **fkw)
 

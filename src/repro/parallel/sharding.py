@@ -107,6 +107,24 @@ def param_specs(params_tree, cfg: ModelConfig, parallel: ParallelConfig,
     return jax.tree_util.tree_map_with_path(rule, params_tree)
 
 
+def ep_param_specs(params_tree, ep_axis: str):
+    """shard_map in_specs for parameters entering the ONE manual program
+    with expert parallelism riding the manual region: stacked MoE expert
+    weights (L, E, ...) split over ``ep_axis`` on the E dim — matching
+    their storage sharding (`param_specs`' mdl(E) rule), so entering the
+    manual region moves no bytes — everything else replicated (the
+    attention/embedding compute is replicated over the model ranks
+    inside manual, exactly like the 0.4.x full-manual fallback)."""
+    def rule(path, leaf):
+        last = _path_str(path).rsplit("/", 1)[-1]
+        if ep_axis and last in ("w_gate", "w_up", "w_down") \
+                and len(leaf.shape) == 4:         # MoE expert (L, E, d, ff)
+            return P(None, ep_axis, None, None)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(rule, params_tree)
+
+
 def batch_specs(batch_tree, mesh, shape_cfg: ShapeConfig):
     dpx = dp_axes(mesh)
     dsz = dp_size(mesh)

@@ -15,7 +15,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.comms import BucketLayout
-from repro.core.collectives.schedule import build_pipeline_schedule
+from repro.core.collectives.schedule import (
+    build_pipeline_schedule,
+    build_stream_schedule,
+)
 
 
 def roundtrip_exact(shapes, dtypes, bucket_bytes, seed):
@@ -113,3 +116,98 @@ def np_bucketed_sync(sizes, shapes, bucket_bytes, seed):
             np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-9)
             np.testing.assert_allclose(got, per_leaf[k], rtol=1e-9,
                                        atol=1e-9)
+
+
+def coalesce_greedy(elems_list, bucket_bytes, itemsize=8):
+    """The production greedy fusion rule over a flat element list:
+    returns groups of indices (tree order, dtype-homogeneous inputs)."""
+    groups, cur = [], []
+    for i, n in enumerate(elems_list):
+        if not n:
+            continue
+        used = sum(elems_list[c] for c in cur) * itemsize
+        if cur and used + n * itemsize > bucket_bytes:
+            groups.append(cur)
+            cur = []
+        cur.append(i)
+    if cur:
+        groups.append(cur)
+    return groups
+
+
+def np_streamed_sync(sizes, n_layers, leaf_shapes, bucket_bytes, seed,
+                     n_streams=2):
+    """The backward-overlapped acceptance property on the numpy mirror.
+
+    A stacked per-layer tree (leading layer axis L, like the unrolled
+    model's ``layers`` grads) is synced the way the release path
+    executes: backward fires one release event per layer, each event
+    syncing ITS layer slice through the bucketed composition, with the
+    task metadata coming from the ONE global ``build_stream_schedule``
+    (one release per layer, double-buffered streams). The result must
+    equal the global-sum oracle, the per-leaf sequential sync, and be
+    independent of ``n_streams`` — streams reorder the wires, never the
+    data.
+
+    Also checks the schedule DAG invariants on the production tasks:
+    phase chains advance, wire reuse waits ``n_streams`` buckets, the
+    ready floor respects the release event order.
+    """
+    n_levels = len(sizes)
+    rng = np.random.default_rng(seed)
+    tree = {f"l{i}": rng.normal(size=tuple(sizes) + (n_layers,)
+                                + tuple(shape))
+            for i, shape in enumerate(leaf_shapes)}
+    oracle = {k: v.sum(axis=tuple(range(n_levels)))
+              for k, v in tree.items()}
+
+    # one local bucket plan per layer slice (identical for every layer)
+    slice_elems = [int(np.prod(shape)) for shape in leaf_shapes]
+    groups = coalesce_greedy(slice_elems, bucket_bytes)
+    n_active = len(groups)
+    if not n_active:
+        return
+    local_elems = [sum(slice_elems[i] for i in g) for g in groups]
+
+    def layer_chunks(r):
+        """Release r syncs layer r's slice, fused with the local plan."""
+        idx = (slice(None),) * n_levels + (r,)
+        out = []
+        for g in groups:
+            flat = [tree[f"l{i}"][idx].reshape(tuple(sizes) + (-1,))
+                    for i in g]
+            out.append(np.concatenate(flat, axis=-1))
+        return out
+
+    # the global stream schedule ties every release's buckets together
+    sched = build_stream_schedule(
+        local_elems * n_layers, sizes,
+        releases=[r for r in range(n_layers) for _ in range(n_active)],
+        n_streams=n_streams)
+
+    # --- DAG invariants on the production tasks ---
+    step = {(t.bucket, t.phase): t.step for t in sched.tasks}
+    for t in sched.tasks:
+        assert t.stream == t.bucket % n_streams
+        assert t.release == t.bucket // n_active
+        if t.phase:
+            assert t.step > step[(t.bucket, t.phase - 1)]
+        else:
+            assert t.step >= t.release          # ready floor
+        if t.bucket >= n_streams:
+            assert t.step > step[(t.bucket - n_streams, t.phase)]
+
+    bufs = [c for r in range(n_layers) for c in layer_chunks(r)]
+    synced = np_run_schedule(sched, bufs, sizes)
+
+    for r in range(n_layers):
+        for gi, g in enumerate(groups):
+            out = synced[r * n_active + gi]
+            off = 0
+            for i in g:
+                got = out[..., off:off + slice_elems[i]]
+                off += slice_elems[i]
+                want = np.broadcast_to(
+                    oracle[f"l{i}"][r].reshape(-1), got.shape)
+                np.testing.assert_allclose(got, want, rtol=1e-9,
+                                           atol=1e-9)

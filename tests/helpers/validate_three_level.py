@@ -294,5 +294,95 @@ check("plan_phase_order",
       phase_ops == ["reduce_scatter", "reduce_scatter", "all_reduce",
                     "all_gather", "all_gather"], f"ops={phase_ops}")
 
+# ---------------------------------------------------------------------------
+# 5) backward-overlapped (streamed) sync at three levels: release points
+#    fired by a real backward == per-leaf path == oracle, and the
+#    release/stream-tagged plan == the executed per-level lookups
+# ---------------------------------------------------------------------------
+from repro.models import layers as Lmod
+
+N_LAYERS = 3
+SBB = 512
+stree = {
+    "layers": {
+        "w": jnp.asarray(rng.normal(size=(DCN, POD, DATA, N_LAYERS, 9, 3)),
+                         jnp.float32),
+        "b": jnp.asarray(rng.normal(size=(DCN, POD, DATA, N_LAYERS, 5)),
+                         jnp.float32),
+    },
+    "embed": jnp.asarray(rng.normal(size=(DCN, POD, DATA, 17)),
+                         jnp.float32),
+}
+want_stree = jax.tree.map(lambda a: a.mean((0, 1, 2)), stree)
+sspecs = jax.tree.map(lambda _: P("dcn", "pod", "data"), stree)
+
+
+def _released_loss(p):
+    """grad == p, each layer slice passing a release point during
+    backward, deepest layer first."""
+    acc = 0.5 * jnp.sum(p["embed"] ** 2)
+    for i in range(N_LAYERS):
+        sl = jax.tree.map(lambda a: a[i], p["layers"])
+        sl = Lmod.grad_release(("layers", i), sl)
+        acc += sum(0.5 * jnp.sum(x ** 2) for x in jax.tree.leaves(sl))
+    return acc
+
+
+def _streamed_step(c):
+    def step(t):
+        local = jax.tree.map(lambda a: a[0, 0, 0], t)
+        sink = c.release_sink(SBB)
+        with Lmod.release_scope(sink):
+            grads = jax.grad(_released_loss)(local)
+        out = c.sync_gradients_streamed(grads, sink, mean=True,
+                                        bucket_bytes=SBB)
+        return jax.tree.map(lambda a: a[None, None, None], out)
+    return compat.shard_map(step, mesh=mesh, in_specs=(sspecs,),
+                            out_specs=sspecs, check_vma=False)
+
+
+for cname, comm in (("hier", comm_hier), ("xla", comm_xla)):
+    got_s = jax.jit(_streamed_step(comm))(stree)
+
+    def plain(t, c=comm):
+        local = jax.tree.map(lambda a: a[0, 0, 0], t)
+        out = c.sync_gradients(jax.grad(_released_loss)(local), mean=True)
+        return jax.tree.map(lambda a: a[None, None, None], out)
+
+    leafwise_s = jax.jit(compat.shard_map(
+        plain, mesh=mesh, in_specs=(sspecs,), out_specs=sspecs,
+        check_vma=False))(stree)
+    want_flat = {jax.tree_util.keystr(p): v for p, v in
+                 jax.tree_util.tree_leaves_with_path(want_stree)}
+    leaf_flat = {jax.tree_util.keystr(p): v for p, v in
+                 jax.tree_util.tree_leaves_with_path(leafwise_s)}
+    for path, got_leaf in jax.tree_util.tree_leaves_with_path(got_s):
+        k = jax.tree_util.keystr(path)
+        check_close(f"streamed_sync_vs_oracle/{cname}{k}",
+                    got_leaf[0, 0, 0], want_flat[k], tol=3e-5)
+        check_close(f"streamed_sync_vs_per_leaf/{cname}{k}",
+                    got_leaf[0, 0, 0], leaf_flat[k][0, 0, 0], tol=3e-5)
+
+rec_s = RecordingComm(comm_hier)
+jax.eval_shape(_streamed_step(rec_s), stree)
+local_stree = jax.tree.map(
+    lambda a: jax.ShapeDtypeStruct(a.shape[3:], a.dtype), stree)
+splan = comm_hier.explain_gradients(local_stree, bucket_bytes=SBB,
+                                    overlap_backward=True)
+splanned = [(e.request.op, e.request.nbytes, e.request.axis_size,
+             e.level, e.spec.algorithm, e.spec.segments)
+            for e in splan.entries if e.source != "psum"]
+check("streamed_explain_matches_executed", rec_s.log == splanned,
+      f"\n  executed={rec_s.log}\n  planned ={splanned}")
+check("streamed_plan_all_levels_per_release",
+      all({e.level for e in splan.entries if e.release == r}
+          == {"intra_host", "intra_pod", "cross_pod"}
+          for r in range(N_LAYERS)))
+check("streamed_plan_double_buffered",
+      {e.stream for e in splan.entries if e.release is not None} == {0, 1})
+check("streamed_plan_residual_after_releases",
+      splan.entries[-1].release is None
+      and "release=" in splan.render() and "stream=" in splan.render())
+
 print(f"FAILS: {len(fails)}")
 sys.exit(1 if fails else 0)

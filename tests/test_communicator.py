@@ -268,26 +268,26 @@ def test_explain_expands_hierarchical_composition():
 
 
 # ---------------------------------------------------------------------------
-# deprecation shims over the old plumbing
+# the deprecated plumbing is gone (shims deleted after their one-release
+# window — regression: they must not quietly reappear)
 # ---------------------------------------------------------------------------
-def test_capi_shims_emit_deprecation_warning():
+def test_capi_shims_removed():
     import repro.core.collectives as coll
-    from repro.core.collectives import api as capi
-    for mod in (capi, coll):           # both public spellings warn
-        for name in ("sync_gradients", "DecisionSource", "StaticDecision",
-                     "TableDecision"):
-            with pytest.warns(DeprecationWarning, match="Communicator"):
+    from repro.core.collectives import dispatch
+    with pytest.raises(ImportError):
+        import repro.core.collectives.api  # noqa: F401
+    for mod in (coll, dispatch):
+        for name in ("sync_gradients", "sync_gradients_reduce_scatter",
+                     "TableDecision", "XLA_DECISION", "DEPRECATED_ALIASES",
+                     "deprecated_getattr"):
+            with pytest.raises(AttributeError):
                 getattr(mod, name)
-    # the shims still resolve to the working internals
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore")
-        assert capi.DecisionSource is not None
-        assert callable(capi.sync_gradients)
-    # the stable value type and executor stay warning-free
+    # the stable value types and executor survive, warning-free
     with warnings.catch_warnings():
         warnings.simplefilter("error")
-        assert capi.CollectiveSpec("xla", 1).normalized().segments == 1
-        assert callable(capi.apply_collective)
+        assert dispatch.CollectiveSpec("xla", 1).normalized().segments == 1
+        assert callable(dispatch.apply_collective)
+        assert issubclass(dispatch.StaticDecision, dispatch.DecisionSource)
 
 
 # ---------------------------------------------------------------------------

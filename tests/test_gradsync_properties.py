@@ -3,13 +3,28 @@ sync: (a) flatten/unflatten bit-identity over random mixed-dtype trees
 with zero-size leaves, (b) bucketed+pipelined schedule == per-leaf
 sequential == global-sum oracle on the numpy machine mirror at 1-3
 levels and random fan-outs — the acceptance property, generalized
-beyond the seeded sweep in test_gradsync_pipeline.py."""
+beyond the seeded sweep in test_gradsync_pipeline.py — plus the
+backward-overlapped extensions: (c) the double-buffered stream schedule
+degenerates exactly to the pipeline schedule at one stream, (d) the
+streamed release-ordered sync preserves the global-sum numerics at any
+stream count, and (e) custom_vjp gradient-release points are
+bit-identical to the unhooked backward and fire in reverse layer
+order."""
+import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from helpers.gradsync_mirror import np_bucketed_sync, roundtrip_exact
+from helpers.gradsync_mirror import (
+    np_bucketed_sync,
+    np_streamed_sync,
+    roundtrip_exact,
+)
+from repro.core.collectives.schedule import (
+    build_pipeline_schedule,
+    build_stream_schedule,
+)
 
 _DTYPES = ("float32", "float64", "int32")
 
@@ -33,3 +48,80 @@ def test_bucket_roundtrip_bit_identical(shapes, dtypes, bucket_bytes,
 def test_bucketed_pipelined_equals_per_leaf_and_global_sum(
         sizes, shapes, bucket_bytes, seed):
     np_bucketed_sync(sizes, shapes, bucket_bytes, seed)
+
+
+# ---------------------------------------------------------------------------
+# backward-overlapped stream schedule + release points
+# ---------------------------------------------------------------------------
+@given(st.lists(st.integers(1, 500), min_size=1, max_size=8),
+       st.lists(st.sampled_from([2, 3, 4]), min_size=1, max_size=3))
+@settings(max_examples=40, deadline=None)
+def test_stream_schedule_degenerates_to_pipeline(bucket_elems, sizes):
+    """n_streams=1 with in-order releases is the PR-5 pipeline schedule:
+    same tasks, same steps (stream order is bucket-major, pipeline order
+    is step-major — compare as sets)."""
+    ps = build_pipeline_schedule(bucket_elems, sizes)
+    ss = build_stream_schedule(bucket_elems, sizes, n_streams=1)
+    key = lambda t: (t.bucket, t.phase, t.step, t.op, t.level,
+                     t.in_elems, t.out_elems)
+    assert sorted(map(key, ps.tasks)) == sorted(map(key, ss.tasks))
+    assert all(t.stream == 0 for t in ss.tasks)
+
+
+@given(st.lists(st.sampled_from([2, 3, 4]), min_size=1, max_size=3),
+       st.integers(1, 4), shapes_st, st.integers(1, 256),
+       st.integers(0, 10 ** 9), st.sampled_from([1, 2, 3]))
+@settings(max_examples=30, deadline=None)
+def test_streamed_release_sync_equals_global_sum(
+        sizes, n_layers, shapes, bucket_bytes, seed, n_streams):
+    np_streamed_sync(sizes, n_layers, shapes, bucket_bytes, seed,
+                     n_streams=n_streams)
+
+
+@given(st.integers(1, 6), st.integers(1, 8), st.integers(0, 10 ** 9))
+@settings(max_examples=25, deadline=None)
+def test_grad_release_bit_identical_and_backward_ordered(
+        n_layers, width, seed):
+    """Hooked per-layer release points must not change the gradient by a
+    single bit relative to the unhooked backward (the release returns
+    the cotangent unchanged here — the identity sink), and the events
+    must fire deepest layer first (reverse layer order — the readiness
+    order the stream schedule keys on)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import layers as L
+
+    rng = np.random.default_rng(seed)
+    xs = {"w": jnp.asarray(rng.normal(size=(n_layers, width)),
+                           jnp.float32),
+          "b": jnp.asarray(rng.normal(size=(n_layers,)), jnp.float32)}
+
+    def loss(xs):
+        acc = jnp.zeros((width,), jnp.float32)
+        for i in range(n_layers):
+            sl = jax.tree.map(lambda a: a[i], xs)
+            sl = L.grad_release(("layers", i), sl)
+            acc = jnp.tanh(acc * sl["w"] + sl["b"])
+        return acc.sum()
+
+    g_plain = jax.grad(loss)(xs)
+
+    class IdentitySink:
+        def __init__(self):
+            self.events = []
+
+        def release(self, tag, ct):
+            self.events.append(tag)
+            return ct
+
+    sink = IdentitySink()
+    with L.release_scope(sink):
+        g_hooked = jax.grad(loss)(xs)
+
+    for a, b in zip(jax.tree.leaves(g_plain), jax.tree.leaves(g_hooked)):
+        assert (np.asarray(a) == np.asarray(b)).all()
+    assert sink.events == [("layers", i)
+                           for i in reversed(range(n_layers))]
+    # outside the scope the hook is inert: no sink, no custom_vjp node
+    assert L._RELEASE_SINK is None

@@ -1,0 +1,383 @@
+"""Backward-overlapped gradient sync: unit coverage for the release
+points, the double-buffered stream schedule, the streamed plan renderer,
+the compute-overlapped cost model, and the config-time validation that
+replaced the mid-build ValueError. The cross-device numerics (streamed
+sync == per-leaf == global psum, MoE through the one-program tuned path)
+live in the 8-device subprocess oracles driven from
+test_communicator.py / test_three_level.py; the generative versions are
+the hypothesis properties in test_gradsync_properties.py, mirrored here
+as seeded sweeps so environments without hypothesis still exercise
+them."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from helpers.gradsync_mirror import np_streamed_sync
+from repro import compat
+from repro.comms import Communicator
+from repro.configs import ARCHITECTURES, get_config
+from repro.configs.base import (
+    CollectiveConfig,
+    CollectiveConfigError,
+    ParallelConfig,
+    ShapeConfig,
+    validate_collectives,
+)
+from repro.core.analytical.costs import Hockney
+from repro.core.analytical.hierarchy import (
+    backward_overlapped_schedule,
+    backward_overlapped_time,
+    overlapped_allreduce_schedule,
+    overlapped_allreduce_time,
+)
+from repro.core.collectives.schedule import (
+    build_pipeline_schedule,
+    build_stream_schedule,
+)
+from repro.models import layers as L
+from repro.models.registry import build_model
+from repro.parallel import sharding as sh
+
+
+# ---------------------------------------------------------------------------
+# config-time validation (the old steps.py mid-build ValueError)
+# ---------------------------------------------------------------------------
+def test_tuned_plus_fsdp_rejected_at_config_time():
+    coll = CollectiveConfig(algorithm="ring")
+    par = ParallelConfig(shard_params_over_data=True)
+    with pytest.raises(CollectiveConfigError, match="--fsdp"):
+        validate_collectives(coll, par)
+    # the message names BOTH sides of the conflict and the way out
+    with pytest.raises(CollectiveConfigError,
+                       match="tuned gradient sync.*FSDP"):
+        validate_collectives(coll, par)
+
+
+def test_overlap_backward_conflicts_are_actionable():
+    par = ParallelConfig()
+    with pytest.raises(CollectiveConfigError, match="--tuning-table"):
+        validate_collectives(CollectiveConfig(overlap_backward=True), par)
+    with pytest.raises(CollectiveConfigError,
+                       match="--overlap-microbatches"):
+        validate_collectives(
+            CollectiveConfig(algorithm="ring", overlap_backward=True,
+                             overlap_microbatches=2), par)
+    with pytest.raises(CollectiveConfigError, match="--fsdp"):
+        validate_collectives(
+            CollectiveConfig(algorithm="ring", overlap_backward=True),
+            ParallelConfig(shard_params_over_data=True))
+
+
+def test_valid_combinations_pass():
+    par = ParallelConfig()
+    validate_collectives(CollectiveConfig(), par)                # xla
+    validate_collectives(CollectiveConfig(algorithm="ring"), par)
+    validate_collectives(
+        CollectiveConfig(algorithm="ring", overlap_backward=True), par)
+    validate_collectives(CollectiveConfig(), ParallelConfig(
+        shard_params_over_data=True))                            # fsdp+xla
+    # the tuned override: a communicator that resolved to untuned
+    # (e.g. table probe fell back to xla) passes with FSDP
+    validate_collectives(CollectiveConfig(algorithm="ring"),
+                         ParallelConfig(shard_params_over_data=True),
+                         tuned=False)
+    # CollectiveConfigError is a ValueError: existing callers that
+    # caught the old steps.py raise keep working
+    assert issubclass(CollectiveConfigError, ValueError)
+
+
+def test_build_train_step_rejects_tuned_fsdp_before_tracing():
+    from repro.launch.steps import build_train_step
+    mesh = compat.make_mesh((1, jax.device_count()), ("pod", "data"))
+    cfg = ARCHITECTURES["smollm-135m"].reduced()
+    shape = ShapeConfig(name="t", seq_len=32, global_batch=4, kind="train")
+    with pytest.raises(CollectiveConfigError, match="--fsdp"):
+        build_train_step(cfg, shape,
+                         ParallelConfig(shard_params_over_data=True),
+                         CollectiveConfig(algorithm="ring"), mesh)
+
+
+# ---------------------------------------------------------------------------
+# the double-buffered stream schedule
+# ---------------------------------------------------------------------------
+def test_stream_schedule_degenerates_to_pipeline_schedule():
+    bs, sizes = [100, 200, 300, 50], [4, 2]
+    ps = build_pipeline_schedule(bs, sizes)
+    ss = build_stream_schedule(bs, sizes, n_streams=1)
+    key = lambda t: (t.bucket, t.phase, t.step, t.op, t.level,
+                     t.in_elems, t.out_elems)
+    assert sorted(map(key, ps.tasks)) == sorted(map(key, ss.tasks))
+
+
+def test_stream_schedule_dag_and_stream_assignment():
+    bs, sizes, n = [10, 20, 30, 40, 50], [2, 2], 2
+    ss = build_stream_schedule(bs, sizes, n_streams=n)
+    step = {(t.bucket, t.phase): t.step for t in ss.tasks}
+    for t in ss.tasks:
+        assert t.stream == t.bucket % n
+        if t.phase:                                  # data edge
+            assert t.step > step[(t.bucket, t.phase - 1)]
+        if t.bucket >= n:                            # wire edge
+            assert t.step > step[(t.bucket - n, t.phase)]
+        if t.phase == 0:                             # ready floor
+            assert t.step >= t.release
+    # two streams really do run two buckets' phase-0 at adjacent steps
+    p0 = sorted(t.step for t in ss.tasks if t.phase == 0)[:2]
+    assert p0 == [0, 1]
+
+
+def test_stream_schedule_release_floor_delays_buckets():
+    bs, sizes = [8, 8, 8], [2]
+    eager = build_stream_schedule(bs, sizes, n_streams=2)
+    late = build_stream_schedule(bs, sizes, releases=[0, 5, 9],
+                                 n_streams=2)
+    assert min(t.step for t in late.tasks if t.release == 5) == 5
+    assert min(t.step for t in late.tasks if t.release == 9) == 9
+    assert max(t.step for t in late.tasks) \
+        > max(t.step for t in eager.tasks)
+
+
+def test_stream_schedule_render_tags():
+    ss = build_stream_schedule([64, 64], [2, 2], n_streams=2)
+    text = ss.render()
+    assert "release" in text and "stream" in text
+    assert "reduce_scatter" in text and "all_gather" in text
+
+
+def test_streamed_sync_mirror_seeded_sweep():
+    """Seeded stand-in for the hypothesis property (hypothesis may be
+    absent): streamed release-ordered sync == global sums at 1-3 levels,
+    1-3 streams, ragged shapes (zero-size and scalar leaves included)."""
+    for seed in range(4):
+        np_streamed_sync([2, 3], 3, [(4, 2), (5,), (), (0, 3), (7,)],
+                         64, seed, n_streams=2)
+        np_streamed_sync([4], 2, [(3,), (2, 2)], 1, seed, n_streams=3)
+        np_streamed_sync([2, 2, 2], 4, [(6,), (1,)], 1 << 20, seed,
+                         n_streams=1)
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp gradient-release points
+# ---------------------------------------------------------------------------
+class _IdentitySink:
+    def __init__(self):
+        self.events = []
+
+    def release(self, tag, ct):
+        self.events.append(tag)
+        return ct
+
+
+def _layered_loss(xs, n_layers, width):
+    acc = jnp.zeros((width,), jnp.float32)
+    for i in range(n_layers):
+        sl = jax.tree.map(lambda a: a[i], xs)
+        sl = L.grad_release(("layers", i), sl)
+        acc = jnp.tanh(acc * sl["w"] + sl["b"])
+    return acc.sum()
+
+
+def test_grad_release_bit_identical_and_backward_ordered():
+    n_layers, width = 4, 8
+    rng = np.random.default_rng(0)
+    xs = {"w": jnp.asarray(rng.normal(size=(n_layers, width)),
+                           jnp.float32),
+          "b": jnp.asarray(rng.normal(size=(n_layers,)), jnp.float32)}
+    g_plain = jax.grad(_layered_loss)(xs, n_layers, width)
+    sink = _IdentitySink()
+    with L.release_scope(sink):
+        g_hooked = jax.grad(_layered_loss)(xs, n_layers, width)
+    for a, b in zip(jax.tree.leaves(g_plain), jax.tree.leaves(g_hooked)):
+        assert (np.asarray(a) == np.asarray(b)).all()
+    # deepest layer's gradients materialize first
+    assert sink.events == [("layers", i)
+                           for i in reversed(range(n_layers))]
+
+
+def test_grad_release_inert_without_sink():
+    tree = {"w": jnp.ones((3,))}
+    assert L.grad_release(("layers", 0), tree) is tree
+    assert L._RELEASE_SINK is None
+
+
+def test_release_scope_restores_previous_sink():
+    a, b = _IdentitySink(), _IdentitySink()
+    with L.release_scope(a):
+        assert L._RELEASE_SINK is a
+        with L.release_scope(b):
+            assert L._RELEASE_SINK is b
+        assert L._RELEASE_SINK is a
+    assert L._RELEASE_SINK is None
+    # exceptions restore too
+    with pytest.raises(RuntimeError):
+        with L.release_scope(a):
+            raise RuntimeError("boom")
+    assert L._RELEASE_SINK is None
+
+
+def test_layer_scan_unrolled_fires_releases_scan_does_not():
+    """The unrolled layer walk hits one release per layer; the scanned
+    walk traces its body once and must stay release-free (the streamed
+    sync falls back to the plain path there)."""
+    n_layers, d = 3, 4
+    xs = {"w": jnp.ones((n_layers, d, d), jnp.float32) * 0.1}
+
+    def body(carry, wl):
+        return jnp.tanh(carry @ wl["w"]), None
+
+    def loss(xs, unroll):
+        out, _ = L.layer_scan(body, jnp.ones((d,), jnp.float32), xs,
+                              unroll=unroll)
+        return out.sum()
+
+    for unroll, want in ((True, [("layers", i) for i in
+                                 reversed(range(n_layers))]),
+                         (False, [])):
+        sink = _IdentitySink()
+        with L.release_scope(sink):
+            jax.grad(loss)(xs, unroll)
+        assert sink.events == want, (unroll, sink.events)
+
+
+# ---------------------------------------------------------------------------
+# one-program param specs for expert parallelism
+# ---------------------------------------------------------------------------
+def test_ep_param_specs_split_expert_weights_only():
+    cfg = get_config("olmoe-1b-7b").reduced()
+    api = build_model(cfg, attn_impl="xla")
+    params_s = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    specs = sh.ep_param_specs(params_s, "model")
+    moe = specs["layers"]["moe"]
+    for name in ("w_gate", "w_up", "w_down"):
+        assert moe["experts"][name] == P(None, "model", None, None) \
+            if "experts" in moe else True
+    flat = jax.tree_util.tree_leaves_with_path(specs)
+    split = {jax.tree_util.keystr(p) for p, s in flat if s != P()}
+    assert split, "no expert weights split over the ep axis"
+    for path in split:
+        assert any(w in path for w in ("w_gate", "w_up", "w_down")), path
+    # every non-expert leaf is replicated (enters manual whole)
+    for p, s in flat:
+        if jax.tree_util.keystr(p) not in split:
+            assert s == P()
+    # a dense model has no 4-D expert stacks: everything replicated
+    dense = ARCHITECTURES["smollm-135m"].reduced()
+    dapi = build_model(dense, attn_impl="xla")
+    dspecs = sh.ep_param_specs(
+        jax.eval_shape(dapi.init, jax.random.PRNGKey(0)), "model")
+    assert all(s == P() for s in jax.tree.leaves(
+        dspecs, is_leaf=lambda x: isinstance(x, P)))
+
+
+# ---------------------------------------------------------------------------
+# streamed plan renderer
+# ---------------------------------------------------------------------------
+def _layered_tree(n_layers=3):
+    return {
+        "layers": {
+            "w": jax.ShapeDtypeStruct((n_layers, 16, 4), jnp.float32),
+            "b": jax.ShapeDtypeStruct((n_layers, 4), jnp.float32),
+        },
+        "embed": jax.ShapeDtypeStruct((32, 4), jnp.float32),
+    }
+
+
+def test_explain_streamed_tags_and_order():
+    mesh = compat.make_mesh((1, jax.device_count()), ("pod", "data"))
+    comm = Communicator.create(mesh, algorithm="ring")
+    tree = _layered_tree(3)
+    plan = comm.explain_gradients(tree, bucket_bytes=1 << 20,
+                                  overlap_backward=True)
+    tagged = [e for e in plan.entries if e.release is not None]
+    assert tagged, "no release-tagged entries"
+    assert {e.release for e in tagged} == {0, 1, 2}
+    assert {e.stream for e in tagged if e.source != "psum"} <= {0, 1}
+    # releases appear in event order, each before the residual entries
+    rel_seq = [e.release for e in plan.entries if e.release is not None]
+    assert rel_seq == sorted(rel_seq)
+    residual = [e for e in plan.entries if e.release is None]
+    assert residual, "embed residual sync missing from the plan"
+    assert plan.entries.index(residual[0]) > plan.entries.index(tagged[-1])
+    text = plan.render()
+    assert "release=" in text and "stream=" in text
+    js = plan.to_json()
+    assert any(e["release"] is not None for e in js)
+    assert all("stream" in e for e in js)
+
+
+def test_explain_streamed_matches_layerless_fallback():
+    mesh = compat.make_mesh((1, jax.device_count()), ("pod", "data"))
+    comm = Communicator.create(mesh, algorithm="ring")
+    flat_tree = {"embed": jax.ShapeDtypeStruct((32, 4), jnp.float32)}
+    a = comm.explain_gradients(flat_tree, bucket_bytes=256,
+                               overlap_backward=True)
+    b = comm.explain_gradients(flat_tree, bucket_bytes=256)
+    assert [(e.request.op, e.request.nbytes, e.bucket, e.step)
+            for e in a.entries] \
+        == [(e.request.op, e.request.nbytes, e.bucket, e.step)
+            for e in b.entries]
+
+
+# ---------------------------------------------------------------------------
+# compute-overlapped cost model
+# ---------------------------------------------------------------------------
+LEVELS = [(4, Hockney(1e-6, 1e-9)), (2, Hockney(5e-6, 1e-8))]
+
+
+def test_backward_overlap_hides_comm_under_compute():
+    buckets = [1 << 20] * 6
+    t_pipe = overlapped_allreduce_time(LEVELS, buckets)
+    # generous compute: everything but the tail hides
+    big = [10 * t_pipe] * 6
+    t_ov = backward_overlapped_time(LEVELS, buckets, big)
+    assert t_ov >= sum(big)                     # can't beat compute
+    exposed = t_ov - sum(big)
+    assert exposed < t_pipe                     # overlap hid comm
+    # zero compute: everything is exposed, but the stream schedule never
+    # models slower than compute-then-pipelined-sync
+    t_zero = backward_overlapped_time(LEVELS, buckets, [0.0] * 6)
+    assert 0 < t_zero <= t_pipe + 1e-12
+
+
+def test_backward_overlap_degenerates_to_pipeline_walk():
+    """n_streams=1 + zero ready floors reproduces the PR-5 pipelined
+    walk exactly (same DAG, one wire per tier)."""
+    def phase_cost(level, op, nbytes):
+        return {0: 1.0, 1: 3.0}[level], 1
+    K = 5
+    pipe, _ = overlapped_allreduce_schedule([2, 2], [100] * K, phase_cost)
+    stream, _ = backward_overlapped_schedule(
+        [2, 2], [100] * K, phase_cost, ready_times=[0.0] * K, n_streams=1)
+    assert stream == pytest.approx(pipe)
+
+
+def test_backward_overlap_ready_floor_paces_the_schedule():
+    def phase_cost(level, op, nbytes):
+        return 1.0, 1
+    ready = [10.0, 20.0, 30.0]
+    makespan, timed = backward_overlapped_schedule(
+        [2], [64] * 3, phase_cost, ready_times=ready, n_streams=2)
+    starts = {t.release: s for t, s, _ in timed}
+    for r, floor in enumerate(ready):
+        assert starts[r] >= floor
+    assert makespan == pytest.approx(31.0)      # last release + its phase
+
+
+def test_streamed_sync_time_bounded_by_compute_plus_pipeline():
+    from repro.core.topology import (
+        Topology,
+        pipelined_sync_time,
+        streamed_sync_time,
+        tune_topology,
+    )
+    topo = Topology.from_spec("2x2x2")
+    decision, _ = tune_topology(topo, ms=tuple(4096 * 4 ** i
+                                               for i in range(3)))
+    buckets = [64 << 10] * 8
+    t_pipe = pipelined_sync_time(topo, decision, buckets)
+    compute = [t_pipe / 16] * 8
+    t_ov = streamed_sync_time(topo, decision, buckets, compute)
+    assert 0 < t_ov <= sum(compute) + t_pipe + 1e-12
+    assert t_ov >= sum(compute)
