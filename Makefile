@@ -11,12 +11,18 @@
 #                 in reduced-size mode (BENCH_SMOKE=1): the perf
 #                 assertions (tuned-hier beats tuned-flat; shared cache
 #                 beats cold; bucketed+pipelined sync beats per-leaf)
-#                 in seconds, for CI.
+#                 in seconds, for CI. --gate additionally compares fresh
+#                 speedup= ratios against the committed BENCH_*_smoke
+#                 snapshots and fails on a >15% regression; telemetry
+#                 artifacts (Perfetto trace + residual summary) land in
+#                 obs_artifacts/ for the CI upload step.
+#   make bench-snapshot - regenerate the committed smoke snapshot after
+#                 an INTENDED perf change (then commit the JSON).
 PY ?= python
 export JAX_COMPILATION_CACHE_DIR ?= $(CURDIR)/.jax_cache
 export JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS ?= 0
 
-.PHONY: check test bench bench-smoke
+.PHONY: check test bench bench-smoke bench-snapshot
 
 check:
 	PYTHONPATH=src $(PY) -m pytest -q -m "not slow"
@@ -29,4 +35,8 @@ bench:
 
 bench-smoke:
 	BENCH_SMOKE=1 PYTHONPATH=src:. $(PY) benchmarks/run.py \
-		--only hierarchy_vs_flat tuner_budget gradsync_pipeline
+		--only hierarchy_vs_flat tuner_budget gradsync_pipeline --gate
+
+bench-snapshot:
+	BENCH_SMOKE=1 PYTHONPATH=src:. $(PY) benchmarks/run.py \
+		--only gradsync_pipeline --json

@@ -1,7 +1,10 @@
 """Shared benchmark scaffolding. Every table emits CSV rows
 ``name,us_per_call,derived``; ``benchmarks/run.py --json`` additionally
 captures each suite's rows into a ``BENCH_<suite>.json`` snapshot so the
-perf trajectory is recorded in-repo."""
+perf trajectory is recorded in-repo, and ``--gate`` compares a fresh
+run's ``speedup=`` ratios against that committed snapshot
+(`gate_rows`), so a scheduling/cost-model regression fails CI instead
+of silently shrinking the table."""
 from __future__ import annotations
 
 import time
@@ -28,6 +31,46 @@ def row(name: str, us_per_call: float, derived: str = ""):
     if _captured is not None:
         _captured.append({"name": name, "us_per_call": round(us_per_call, 3),
                           "derived": derived})
+
+
+def speedup_of(row: dict) -> Optional[float]:
+    """The ``speedup=<X>x`` ratio from a row's derived column, or None
+    when the row carries no speedup (such rows are not gated — speedups
+    are ratios of modeled times, stable across machines, where raw
+    us_per_call is not)."""
+    for part in (row.get("derived") or "").split(";"):
+        if part.startswith("speedup="):
+            try:
+                return float(part[len("speedup="):].rstrip("x"))
+            except ValueError:
+                return None
+    return None
+
+
+def gate_rows(rows: List[dict], snapshot_rows: List[dict],
+              tolerance: float = 0.15) -> List[str]:
+    """Compare a fresh run's speedup ratios against the committed
+    snapshot. Returns one problem string per regression: a snapshot row
+    whose speedup the fresh run missed by more than ``tolerance``
+    (relative), or dropped entirely. Fresh rows absent from the
+    snapshot are fine (new benchmarks land before their snapshot)."""
+    fresh = {r["name"]: speedup_of(r) for r in rows}
+    problems = []
+    for r in snapshot_rows:
+        ref = speedup_of(r)
+        if ref is None:
+            continue
+        name = r["name"]
+        got = fresh.get(name)
+        if got is None:
+            problems.append(
+                f"{name}: missing from fresh run "
+                f"(snapshot speedup {ref:.2f}x)")
+        elif got < ref * (1.0 - tolerance):
+            problems.append(
+                f"{name}: speedup {got:.2f}x regressed more than "
+                f"{tolerance:.0%} below snapshot {ref:.2f}x")
+    return problems
 
 
 def timeit(fn, *args, repeats: int = 5, warmup: int = 1) -> float:

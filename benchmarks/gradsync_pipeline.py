@@ -37,9 +37,24 @@ Acceptance: bucketed+pipelined <= leaf-sequential everywhere, strictly
 below on the 3-level topology; backward-overlapped exposed comm <=
 bucketed+pipelined everywhere, strictly below on the 3-level topology.
 
+Each 3-level (topology, mix) additionally gets a measured-vs-modeled
+row: the SAME stream schedule is walked twice — once priced by the
+per-level simulators' expected times (the modeled side, identical to
+``streamed_sync_time``) and once by their noise-sampled ``measure``
+calls (a synthetic fabric run) — and the two walks are joined through
+`repro.obs.residuals.residual_report`, reporting the measured makespan
+and the per-tier drift statistic. Because the fabric IS the model plus
+lognormal noise, drift must stay near zero (asserted): the telemetry
+join is calibrated against a known-healthy fabric every CI run. In
+smoke mode the walk's Perfetto trace + residual summary land in
+``obs_artifacts/`` for CI upload.
+
 CSV rows: ``gradsync/<spec>/<mix>/<strategy>, us, speedup vs
 leaf-sequential``. ``benchmarks/run.py --json`` snapshots the table to
-``BENCH_gradsync.json``.
+``BENCH_gradsync.json`` (``BENCH_gradsync_smoke.json`` under
+BENCH_SMOKE=1 — the two tiers sweep different sizes, so they keep
+separate snapshots and the ``--gate`` regression check always compares
+like with like).
 """
 from __future__ import annotations
 
@@ -60,12 +75,13 @@ from repro.core.topology import (
     tune_overlap_schedule,
     tune_topology,
 )
-
-JSON_NAME = "gradsync"
+from repro.core.topology.tune import decided_phase_cost
 
 #: BENCH_SMOKE=1 (the `make bench-smoke` CI tier) shrinks the sweep; the
 #: pipelined <= leaf-sequential assertion runs on both tiers
 SMOKE = os.environ.get("BENCH_SMOKE") == "1"
+
+JSON_NAME = "gradsync_smoke" if SMOKE else "gradsync"
 
 TUNE_MS = tuple(4096 * 4 ** i for i in range(4 if SMOKE else 6))
 
@@ -96,6 +112,75 @@ def topologies():
             (Topology.from_spec(spec3), spec3, 3)]
 
 
+def measured_vs_modeled(topo, decision, buckets, compute,
+                        t_stream, label, mix):
+    """Walk the stream schedule twice — expected-time pricing (the
+    modeled side, == `streamed_sync_time`) vs the simulators'
+    noise-sampled ``measure`` (a synthetic fabric run) — join the two
+    through the telemetry residual report, and emit the
+    measured-vs-modeled row. Returns the report (the smoke tier
+    exports it)."""
+    from repro.core.analytical.hierarchy import backward_overlapped_schedule
+    from repro.core.tuning.simulator import NetworkSimulator
+    from repro.obs.residuals import residual_report, spans_from_timed
+
+    sizes = [lv.size for lv in topo.levels]
+    names = [lv.name for lv in topo.levels]
+    releases = list(range(len(buckets)))
+    ready, acc = [], 0.0
+    for c in compute:
+        acc += float(c)
+        ready.append(acc)
+
+    sims = {lv.name: NetworkSimulator(lv.profile) for lv in topo.levels}
+
+    def sampled_cost(level, op, nbytes):
+        lv = topo.levels[level]
+        spec = decision.spec_for_level(lv.name, op, int(nbytes), lv.size)
+        t = sims[lv.name].measure(op, spec.algorithm, lv.size, nbytes,
+                                  spec.segments)[0]
+        return t, max(1, spec.segments)
+
+    t_measured, timed = backward_overlapped_schedule(
+        sizes, [int(b) for b in buckets], sampled_cost,
+        releases=releases, ready_times=ready, n_streams=2)
+    spans = spans_from_timed(timed)
+    rep = residual_report(
+        sizes, buckets, decided_phase_cost(topo, decision),
+        releases=releases, ready_times=ready, n_streams=2,
+        spans=spans, level_names=names)
+    # the modeled walk is streamed_sync_time's walk, by construction
+    assert rep.modeled_makespan == t_stream, (
+        f"{label}/{mix}: residual report modeled "
+        f"{rep.modeled_makespan:.9f}s != streamed_sync_time "
+        f"{t_stream:.9f}s — the telemetry join drifted off the "
+        f"executor's cost model")
+    drift = rep.drift()
+    # the synthetic fabric IS the model + 4% lognormal noise: per-tier
+    # occupancy ratios must agree to well within re-tune territory
+    assert drift < 0.2, (
+        f"{label}/{mix}: drift {drift:.3f} on an undisturbed fabric")
+    row(f"gradsync/{label}/{mix}/measured-vs-modeled",
+        rep.modeled_makespan * 1e6,
+        f"measured_us={t_measured * 1e6:.3f};drift={drift:.3f};"
+        f"tasks={rep.measured_tasks()}/{len(rep.tasks)}")
+    return rep, spans
+
+
+def export_smoke_artifacts(rep, timed_spans, names):
+    """The CI-uploaded telemetry artifacts: the measured walk as a
+    Perfetto trace plus the residual summary."""
+    from repro.obs.export import write_chrome_trace, write_summary
+
+    out = Path("obs_artifacts")
+    out.mkdir(exist_ok=True)
+    write_chrome_trace(str(out / "gradsync_trace.json"), timed_spans,
+                       level_names=names)
+    write_summary(str(out / "gradsync_summary.json"), residuals=rep,
+                  extra={"suite": "gradsync_pipeline", "smoke": True})
+    rep.write(str(out / "gradsync_residuals.json"))
+
+
 def run():
     results = {}
     for topo, label, n_levels in topologies():
@@ -122,6 +207,13 @@ def run():
                 row(f"gradsync/{label}/{mix}/{strat}", t * 1e6,
                     f"speedup={t_leaf / max(t, 1e-12):.2f}x;bucket_bytes="
                     f"{bucket_bytes};buckets={len(buckets)}")
+            if n_levels == 3:
+                rep, spans = measured_vs_modeled(
+                    topo, decision, buckets, compute, t_stream, label,
+                    mix)
+                if SMOKE and mix == "transformer":
+                    export_smoke_artifacts(
+                        rep, spans, [lv.name for lv in topo.levels])
             results[(label, mix)] = (n_levels, t_leaf, t_bucket, t_pipe,
                                      t_overlap, len(buckets))
 

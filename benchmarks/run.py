@@ -2,9 +2,13 @@
 Prints ``name,us_per_call,derived`` CSV; ``--json`` additionally writes
 each suite's rows to ``BENCH_<suite>.json`` (a suite may override the
 file stem with a module-level ``JSON_NAME``) so the perf trajectory is
-recorded in-repo."""
+recorded in-repo. ``--gate`` compares the fresh rows' ``speedup=``
+ratios against that committed snapshot and exits non-zero on a
+regression beyond ``--gate-tolerance`` (the `make bench-smoke` CI
+check)."""
 import argparse
 import json
+import os
 import sys
 import traceback
 
@@ -48,12 +52,21 @@ def main() -> None:
     ap.add_argument("--json", action="store_true",
                     help="also write each suite's rows to "
                          "BENCH_<suite>.json in the current directory")
+    ap.add_argument("--gate", action="store_true",
+                    help="compare fresh speedup= ratios against the "
+                         "committed BENCH_<suite>.json snapshot; exit "
+                         "non-zero on a regression (suites without a "
+                         "snapshot are skipped with a note)")
+    ap.add_argument("--gate-tolerance", type=float, default=0.15,
+                    help="relative slack before a lower speedup counts "
+                         "as a regression (default 0.15)")
     args = ap.parse_args()
     names = args.only or list(SUITES)
     print("name,us_per_call,derived")
     failed = []
+    gate_problems = []
     for name in names:
-        if args.json:
+        if args.json or args.gate:
             common.start_capture()
         try:
             SUITES[name].run()
@@ -61,13 +74,31 @@ def main() -> None:
             failed.append(name)
             traceback.print_exc()
         finally:
-            if args.json:
+            if args.json or args.gate:
                 rows = common.end_capture()
                 stem = getattr(SUITES[name], "JSON_NAME", name)
-                with open(f"BENCH_{stem}.json", "w") as f:
-                    json.dump({"suite": name, "rows": rows}, f, indent=1)
+                snap_path = f"BENCH_{stem}.json"
+                if args.json:
+                    with open(snap_path, "w") as f:
+                        json.dump({"suite": name, "rows": rows}, f,
+                                  indent=1)
+                if args.gate and not args.json:
+                    if not os.path.exists(snap_path):
+                        print(f"gate: no snapshot {snap_path} for "
+                              f"{name}, skipping", file=sys.stderr)
+                    else:
+                        with open(snap_path) as f:
+                            snap = json.load(f)["rows"]
+                        gate_problems.extend(common.gate_rows(
+                            rows, snap, tolerance=args.gate_tolerance))
+    for p in gate_problems:
+        print(f"gate: {p}", file=sys.stderr)
     if failed:
         print(f"FAILED suites: {failed}", file=sys.stderr)
+        sys.exit(1)
+    if gate_problems:
+        print(f"gate: {len(gate_problems)} regression(s) vs committed "
+              f"snapshots", file=sys.stderr)
         sys.exit(1)
 
 

@@ -50,6 +50,8 @@ from repro.core.collectives.schedule import (
     build_stream_schedule,
     execute_pipelined,
 )
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import MetricsRegistry
 #: gradient-sync mesh axes, innermost tier first — a mesh carrying any of
 #: these is data-parallel over them ("data" inside the host/pod, "pod"
 #: across pods, "dcn" across the WAN-class links)
@@ -86,7 +88,14 @@ class _ReleaseSink:
 
     def release(self, tag, ct):
         self.events.append(tag)
-        return self.comm._sync_release(ct, self.bucket_bytes)
+        rec = obs_trace.active() or self.comm.trace
+        if rec is None:
+            return self.comm._sync_release(ct, self.bucket_bytes)
+        r = len(self.events) - 1
+        with obs_trace.installed(rec):
+            rec.note_release(tag, r, self.n_streams)
+            with rec.tags(release=r):
+                return self.comm._sync_release(ct, self.bucket_bytes)
 
 
 def _supported(op: str, algorithm: str) -> bool:
@@ -298,9 +307,15 @@ class Communicator:
                  probed=None, probed_topology=None,
                  a2a_algorithm: str = "xla",
                  artifact_path: Optional[str] = None,
-                 bucket_bytes: int = 0):
+                 bucket_bytes: int = 0, trace=None):
         self.mesh = mesh
         self.topology = topology
+        #: optional `repro.obs.TraceRecorder` — installed around every
+        #: dispatch root so traced launches need no explicit scoping
+        self.trace = trace
+        #: runtime counters (decision-cache hits/misses, ...); the
+        #: recorder keeps its own wire counters (bytes per tier)
+        self.metrics = MetricsRegistry()
         self.probed = probed
         self.probed_topology = probed_topology
         self._policy = policy or _XlaPolicy()
@@ -329,7 +344,8 @@ class Communicator:
                probe: bool = False, static: Optional[CollectiveSpec] = None,
                algorithm: str = "xla", segment_bytes: int = 0,
                a2a_algorithm: str = "xla", probed=None,
-               bucket_bytes: Optional[int] = None) -> "Communicator":
+               bucket_bytes: Optional[int] = None,
+               trace=None) -> "Communicator":
         """Resolve the full decision stack once.
 
         artifact      a schema-2/3 artifact path or an already-loaded
@@ -354,7 +370,11 @@ class Communicator:
                       overlap-pipelined `sync_gradients`. None (default)
                       adopts the artifact's tuned schedule when it
                       carries one; an explicit int forces it (0 disables
-                      — the sequential per-leaf path).
+                      — the sequential per-leaf path);
+        trace         a `repro.obs.TraceRecorder` (or True for a fresh
+                      one) recording schedule-keyed spans for every
+                      dispatch; None (default) keeps the traced paths
+                      bit-identical to the uninstrumented runtime.
         """
         from repro.core.topology.decision import (
             HierarchicalDecision,
@@ -419,10 +439,12 @@ class Communicator:
             sched = _meta_schedule(policy)
             bucket_bytes = int(sched.get("bucket_bytes", 0)) if sched \
                 else 0
+        if trace is True:
+            trace = obs_trace.TraceRecorder()
         return cls(mesh, policy=policy, topology=topology, probed=probed,
                    probed_topology=probed_topology,
                    a2a_algorithm=a2a_algorithm, artifact_path=path,
-                   bucket_bytes=bucket_bytes)
+                   bucket_bytes=bucket_bytes, trace=trace)
 
     @classmethod
     def from_config(cls, coll, mesh=None, *, topology=None,
@@ -464,7 +486,9 @@ class Communicator:
         policy is frozen, so resolution is pure in the request)."""
         hit = self._plan_cache.get(req)
         if hit is not None:
+            self.metrics.inc("decision_cache_hit", label="plan")
             return hit
+        self.metrics.inc("decision_cache_miss", label="plan")
         if req.op == "all_to_all" and self._a2a != "xla":
             # an explicit a2a algorithm (CLI / config) overrides the table:
             # the user pinned the MoE dispatch schedule deliberately
@@ -491,8 +515,11 @@ class Communicator:
         key = (level, op, int(nbytes), int(axis_size))
         hit = self._level_spec_cache.get(key)
         if hit is None:
+            self.metrics.inc("decision_cache_miss", label="level_spec")
             hit = self._policy.level_spec(level, op, nbytes, axis_size)
             self._level_spec_cache[key] = hit
+        else:
+            self.metrics.inc("decision_cache_hit", label="level_spec")
         return hit
 
     # -- planning / explainability ------------------------------------------
@@ -509,9 +536,12 @@ class Communicator:
         key = tuple(axes)
         hit = self._level_keys_cache.get(key)
         if hit is None:
+            self.metrics.inc("decision_cache_miss", label="level_keys")
             hit = self._policy.level_keys(axes) \
                 if self._policy.kind == "hier" else list(range(len(axes)))
             self._level_keys_cache[key] = hit
+        else:
+            self.metrics.inc("decision_cache_hit", label="level_keys")
         return list(hit)
 
     def _composition_entries(self, req: CollectiveRequest
@@ -615,7 +645,8 @@ class Communicator:
 
     def explain_gradients(self, tree, *,
                           bucket_bytes: Optional[int] = None,
-                          overlap_backward: bool = False) -> PlanReport:
+                          overlap_backward: bool = False,
+                          measured=None) -> PlanReport:
         """The gradient-sync plan, exactly as it will execute.
 
         Without bucketing (no tuned schedule in the artifact and no
@@ -628,7 +659,26 @@ class Communicator:
         backward-overlapped stream schedule — one release event per
         layer in backward order (deepest layer first), each entry tagged
         ``release=``/``stream=``/``step=`` from the double-buffered
-        stream DAG, followed by the residual (embeddings, ...) sync."""
+        stream DAG, followed by the residual (embeddings, ...) sync.
+
+        ``measured`` overlays recorded timings onto the plan: a
+        `repro.obs.TraceRecorder` (or its span list) from a traced or
+        replayed execution of this same schedule, matched span-by-span
+        in issue order; matched entries render ``measured=..us``
+        (entries the recorder never saw — e.g. psum tops — stay
+        bare)."""
+        report = self._explain_gradients_plan(
+            tree, bucket_bytes=bucket_bytes,
+            overlap_backward=overlap_backward)
+        if measured is not None:
+            spans = getattr(measured, "spans", measured)
+            report = report.with_measured(spans)
+        return report
+
+    def _explain_gradients_plan(self, tree, *,
+                                bucket_bytes: Optional[int] = None,
+                                overlap_backward: bool = False
+                                ) -> PlanReport:
         if overlap_backward:
             return self._explain_gradients_streamed(
                 tree, self._resolve_bucket_bytes(bucket_bytes))
@@ -700,21 +750,30 @@ class Communicator:
                              "attached to this Communicator)")
         return axis, self.mesh.shape[axis]
 
+    def _traced(self):
+        """Install this communicator's recorder around a dispatch root.
+        A no-op without one (`obs_trace.installed(None)` leaves any
+        externally installed recorder capturing), so every root can wrap
+        itself unconditionally at zero cost."""
+        return obs_trace.installed(self.trace)
+
     def _dispatch_flat(self, op, x, axis, *, reduce_op="add"):
         axis, p = self._axis_and_size(axis)
         req = CollectiveRequest.for_array(op, x, axis, p,
                                           reduce_op=reduce_op)
-        return apply_collective(op, x, axis, p, self.spec(req),
-                                reduce_op=reduce_op)
+        with self._traced():
+            return apply_collective(op, x, axis, p, self.spec(req),
+                                    reduce_op=reduce_op)
 
     def all_reduce(self, x, axis=None, *, reduce_op: str = "add"):
         """Tuned all-reduce of the local buffer (inside shard_map). A
         multi-axis ``axis=(inner, ..., outer)`` runs the N-level
         reduce-scatter / all-reduce / all-gather composition."""
         if isinstance(axis, tuple):
-            return multilevel_all_reduce(
-                x, self._levels_for(axis), self, op=reduce_op,
-                level_keys=self._level_keys(axis))
+            with self._traced():
+                return multilevel_all_reduce(
+                    x, self._levels_for(axis), self, op=reduce_op,
+                    level_keys=self._level_keys(axis))
         return self._dispatch_flat("all_reduce", x, axis,
                                    reduce_op=reduce_op)
 
@@ -723,9 +782,10 @@ class Communicator:
         ``axis`` composes reduce-scatter over every level, innermost
         first."""
         if isinstance(axis, tuple):
-            return multilevel_reduce_scatter(
-                x, self._levels_for(axis), self, op=reduce_op,
-                level_keys=self._level_keys(axis))
+            with self._traced():
+                return multilevel_reduce_scatter(
+                    x, self._levels_for(axis), self, op=reduce_op,
+                    level_keys=self._level_keys(axis))
         return self._dispatch_flat("reduce_scatter", x, axis,
                                    reduce_op=reduce_op)
 
@@ -734,9 +794,10 @@ class Communicator:
         ``axis`` composes all-gather outermost-first (the inverse of the
         multi-axis reduce-scatter)."""
         if isinstance(axis, tuple):
-            return multilevel_all_gather(
-                x, self._levels_for(axis), self,
-                level_keys=self._level_keys(axis))
+            with self._traced():
+                return multilevel_all_gather(
+                    x, self._levels_for(axis), self,
+                    level_keys=self._level_keys(axis))
         return self._dispatch_flat("all_gather", x, axis)
 
     def all_to_all(self, x, axis=None):
@@ -782,13 +843,16 @@ class Communicator:
 
         bb = self._resolve_bucket_bytes(bucket_bytes)
         if bb:
-            return self._sync_gradients_bucketed(grads, bb, mean=mean,
-                                                 denom=denom)
+            with self._traced():
+                return self._sync_gradients_bucketed(grads, bb, mean=mean,
+                                                     denom=denom)
 
         if self.hierarchical and len(self._sync_axes) > 1:
-            return sync_gradients_multilevel(
-                grads, self._levels_for(self._sync_axes), self, mean=mean,
-                level_keys=self._level_keys(self._sync_axes))
+            with self._traced():
+                return sync_gradients_multilevel(
+                    grads, self._levels_for(self._sync_axes), self,
+                    mean=mean,
+                    level_keys=self._level_keys(self._sync_axes))
 
         def sync_leaf(g):
             out = self._dispatch_flat("all_reduce", g, inner)

@@ -64,37 +64,59 @@ def _pingpong(ms: int, devices=None):
     return fn, x
 
 
-def _time_pair(dev_a, dev_b, m: int, trials: int = 3) -> float:
+def _time_pair(dev_a, dev_b, m: int, trials: int = 3, *,
+               clock: Optional[Callable[[], float]] = None,
+               pingpong: Optional[Callable] = None) -> float:
     """Seconds one m-byte one-way transfer takes between two devices
-    (best of ``trials`` timed pingpong rounds, halved). Tests monkeypatch
-    this to drive the pair-selection logic with a fake fabric."""
-    fn, x = _pingpong(m, devices=(dev_a, dev_b))
+    (best of ``trials`` timed pingpong rounds, halved). ``clock`` and
+    ``pingpong`` inject a fake timer / exchange (tests drive the timing
+    path deterministically — e.g. `repro.obs.FakeClock` — instead of
+    monkeypatching this function wholesale)."""
+    clock = clock or time.perf_counter
+    fn, x = (pingpong or _pingpong)(m, devices=(dev_a, dev_b))
     jax.block_until_ready(fn(x))             # compile + warm
     best = float("inf")
     for _ in range(trials):
-        t0 = time.perf_counter()
+        t0 = clock()
         jax.block_until_ready(fn(x))
-        best = min(best, time.perf_counter() - t0)
+        best = min(best, clock() - t0)
     return best / 2.0                        # per one-way transfer
 
 
 def probe_live_profile(ms: Sequence[int] = PROBE_SIZES, *,
                        trials: int = 3,
                        base: Optional[NetworkProfile] = None,
-                       devices=None) -> Optional[NetworkProfile]:
+                       devices=None,
+                       clock: Optional[Callable[[], float]] = None,
+                       pingpong: Optional[Callable] = None
+                       ) -> Optional[NetworkProfile]:
     """Probe the live fabric between one device pair (the first two
     visible devices by default).
 
     Returns the fitted `NetworkProfile`, or None when fewer than two
     devices are attached (nothing to probe — callers fall back to the
-    artifact's first profile).
+    artifact's first profile). ``clock``/``pingpong`` thread through to
+    `_time_pair` (injectable timing, tests).
     """
     if devices is None:
         if jax.device_count() < 2:
             return None
         devices = jax.devices()[:2]
-    ts = [_time_pair(devices[0], devices[1], m, trials) for m in ms]
+    kw = _inject_kwargs(clock, pingpong)
+    ts = [_time_pair(devices[0], devices[1], m, trials, **kw) for m in ms]
     return fit_profile(list(ms), ts, base=base)
+
+
+def _inject_kwargs(clock, pingpong) -> dict:
+    """Forward clock/pingpong to `_time_pair` only when actually set, so
+    tests that replace `_time_pair` wholesale (positional signature) keep
+    working alongside the injectable-timing path."""
+    kw = {}
+    if clock is not None:
+        kw["clock"] = clock
+    if pingpong is not None:
+        kw["pingpong"] = pingpong
+    return kw
 
 
 # ---------------------------------------------------------------------------
@@ -134,7 +156,9 @@ def level_probe_pairs(mesh) -> List[Tuple[str, str, int, Tuple]]:
 
 def probe_mesh_topology(mesh, ms: Sequence[int] = PROBE_SIZES, *,
                         trials: int = 3,
-                        timer: Optional[Callable] = None
+                        timer: Optional[Callable] = None,
+                        clock: Optional[Callable[[], float]] = None,
+                        pingpong: Optional[Callable] = None
                         ) -> Optional[Topology]:
     """Probe every sync tier of ``mesh`` and synthesize a `Topology`.
 
@@ -149,8 +173,9 @@ def probe_mesh_topology(mesh, ms: Sequence[int] = PROBE_SIZES, *,
     pairs = level_probe_pairs(mesh)
     if not pairs:
         return None
+    kw = _inject_kwargs(clock, pingpong)
     time_pair = timer if timer is not None else \
-        (lambda a, b, m: _time_pair(a, b, m, trials))
+        (lambda a, b, m: _time_pair(a, b, m, trials, **kw))
 
     def make_measure(dev_a, dev_b):
         return lambda m: time_pair(dev_a, dev_b, m)

@@ -36,6 +36,7 @@ class PlanEntry:
     step: Optional[int] = None    # pipeline step (pipelined sync)
     release: Optional[int] = None  # grad-release event (streamed sync)
     stream: Optional[int] = None   # permute stream (streamed sync)
+    measured_us: Optional[float] = None  # recorded span (measured overlay)
 
     def render(self) -> str:
         lvl = f" level={self.level}" if self.level else ""
@@ -43,10 +44,12 @@ class PlanEntry:
             if self.bucket is not None else ""
         if self.release is not None:
             pipe += f" release={self.release} stream={self.stream}"
+        meas = f" measured={self.measured_us:.1f}us" \
+            if self.measured_us is not None else ""
         return (f"{self.request.op:14s} {self.request.nbytes:>10d} B "
                 f"p={self.request.axis_size:<4d}-> "
                 f"{self.spec.algorithm} segments={self.spec.segments}"
-                f"{lvl}{pipe} [{self.source}]")
+                f"{lvl}{pipe}{meas} [{self.source}]")
 
 
 @dataclasses.dataclass
@@ -68,6 +71,30 @@ class PlanReport:
     def render(self, indent: str = "  ") -> str:
         return "\n".join(indent + e.render() for e in self.entries)
 
+    def with_measured(self, spans) -> "PlanReport":
+        """Overlay recorded spans (`repro.obs.trace.Span`, duck-typed)
+        onto the plan: spans and entries are matched SEQUENTIALLY on
+        ``(op, nbytes, axis)`` — both sides are in issue order by
+        construction, and the key skips plan entries the recorder never
+        dispatched (the flat path's psum tops run through
+        ``jax.lax.psum``, not the tuned dispatch). Unmatched entries
+        keep ``measured_us=None``."""
+        spans = [s for s in spans
+                 if getattr(s, "kind", "collective") == "collective"]
+        out: List[PlanEntry] = []
+        i = 0
+        for e in self.entries:
+            s = spans[i] if i < len(spans) else None
+            if s is not None and s.op == e.request.op \
+                    and int(s.nbytes) == int(e.request.nbytes) \
+                    and s.axis == e.request.axis:
+                out.append(dataclasses.replace(
+                    e, measured_us=(s.t_end - s.t_start) * 1e6))
+                i += 1
+            else:
+                out.append(e)
+        return PlanReport(out)
+
     def to_json(self) -> List[dict]:
         return [{
             "op": e.request.op, "nbytes": e.request.nbytes,
@@ -76,4 +103,17 @@ class PlanReport:
             "level": e.level, "source": e.source,
             "bucket": e.bucket, "step": e.step,
             "release": e.release, "stream": e.stream,
+            "measured_us": e.measured_us,
         } for e in self.entries]
+
+
+def render_metrics(registry, indent: str = "  ") -> str:
+    """Render a `repro.obs.MetricsRegistry` (the Communicator's
+    ``metrics``, a TraceRecorder's ``counters``) one counter per line —
+    the dry-run / --explain counterpart of `PlanReport.render`."""
+    lines = []
+    for name, label, value in registry.items():
+        tag = f"{{{label}}}" if label else ""
+        val = f"{int(value)}" if float(value).is_integer() else f"{value:g}"
+        lines.append(f"{indent}{name}{tag} = {val}")
+    return "\n".join(lines)

@@ -137,6 +137,28 @@ def _compose(levels, m, methods, gamma):
 # ---------------------------------------------------------------------------
 # overlap-pipelined schedules (survey §4.1, CCTP tiling + pipelining)
 # ---------------------------------------------------------------------------
+def modeled_phase_cost(
+    levels: Sequence[Tuple[int, CommModel]],
+    methods: Optional[Dict[Tuple[int, str], Tuple[str, int]]] = None,
+    *,
+    gamma: float = VPU_GAMMA,
+):
+    """``phase_cost(level, op, nbytes) -> (seconds, segments)`` under the
+    per-level communication models — THE pricing closure of
+    `overlapped_allreduce_time` and `backward_overlapped_time`, exported
+    so the telemetry residuals (`repro.obs.residuals`) price the same
+    schedule with the same closure and reproduce those totals exactly.
+    ``methods`` maps (level, op) -> (algorithm, segments); omitted
+    entries use the per-level model-optimal pick."""
+    def phase_cost(level, op, nbytes):
+        p, model = levels[level]
+        t, (_, segs) = _phase(op, model, p, float(nbytes),
+                              (methods or {}).get((level, op)), gamma)
+        return t, segs
+
+    return phase_cost
+
+
 def overlapped_allreduce_schedule(
     sizes: Sequence[int],
     bucket_elems: Sequence[int],
@@ -208,17 +230,9 @@ def overlapped_allreduce_time(
     of `hierarchical_allreduce_cost`. ``methods`` maps (level, op) ->
     (algorithm, segments); omitted entries use the per-level
     model-optimal pick."""
-    sizes = [p for p, _ in levels]
-
-    def phase_cost(level, op, nbytes):
-        p, model = levels[level]
-        t, (_, segs) = _phase(op, model, p, float(nbytes),
-                              (methods or {}).get((level, op)), gamma)
-        return t, segs
-
-    return overlapped_allreduce_schedule(sizes, [int(b) for b in
-                                                 bucket_bytes],
-                                         phase_cost)[0]
+    return overlapped_allreduce_schedule(
+        [p for p, _ in levels], [int(b) for b in bucket_bytes],
+        modeled_phase_cost(levels, methods, gamma=gamma))[0]
 
 
 def backward_overlapped_schedule(
@@ -314,16 +328,9 @@ def backward_overlapped_time(
     for c in compute_times:
         acc += float(c)
         ready.append(acc)
-    sizes = [p for p, _ in levels]
-
-    def phase_cost(level, op, nbytes):
-        p, model = levels[level]
-        t, (_, segs) = _phase(op, model, p, float(nbytes),
-                              (methods or {}).get((level, op)), gamma)
-        return t, segs
-
     return backward_overlapped_schedule(
-        sizes, [int(b) for b in bucket_bytes], phase_cost,
+        [p for p, _ in levels], [int(b) for b in bucket_bytes],
+        modeled_phase_cost(levels, methods, gamma=gamma),
         releases=list(range(len(bucket_bytes))), ready_times=ready,
         n_streams=n_streams)[0]
 

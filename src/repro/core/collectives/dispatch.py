@@ -19,6 +19,7 @@ from __future__ import annotations
 import dataclasses
 
 from repro.core.collectives import algorithms as alg
+from repro.obs import trace as obs_trace
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,6 +49,12 @@ class StaticDecision(DecisionSource):
 def apply_collective(op: str, x, axis: str, axis_size: int,
                      spec: CollectiveSpec, **kw):
     fn = alg.get(op, spec.algorithm)
+    rec = obs_trace.active()
+    if rec is not None:
+        # trace mode: the recorder dispatches and records the span; with
+        # no recorder installed (the common case) this is one dead branch
+        # and the path below is byte-for-byte the uninstrumented dispatch
+        return rec.run_collective(fn, op, x, axis, axis_size, spec, kw)
     if op in ("all_reduce", "reduce_scatter", "reduce"):
         return fn(x, axis, axis_size, segments=spec.segments,
                   op=kw.get("reduce_op", "add"))

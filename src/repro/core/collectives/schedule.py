@@ -39,6 +39,7 @@ import jax.numpy as jnp
 
 from repro.core.analytical.hierarchy import padded_allreduce_schedule
 from repro.core.collectives.dispatch import apply_collective
+from repro.obs import trace as obs_trace
 
 
 def pack_buckets(leaves: Sequence[Tuple[int, str]], bucket_bytes: int
@@ -283,6 +284,7 @@ def execute_pipelined(
     assert len(buckets) == len(schedule.bucket_elems), \
         f"{len(buckets)} buffers for {len(schedule.bucket_elems)} buckets"
     keys = _keys(levels, level_keys)
+    rec = obs_trace.active()
     state = [b.reshape(-1) for b in buckets]
     for t in schedule.tasks:
         axis, p = levels[t.level]
@@ -291,8 +293,16 @@ def execute_pipelined(
             flat = jnp.pad(flat, (0, t.in_elems - flat.size))
         spec = _level_spec(decision, keys[t.level], t.op,
                            t.in_elems * flat.dtype.itemsize, p)
-        flat = apply_collective(t.op, flat, axis, p, spec,
-                                reduce_op=op).reshape(-1)
+        if rec is None:
+            flat = apply_collective(t.op, flat, axis, p, spec,
+                                    reduce_op=op).reshape(-1)
+        else:
+            # push the schedule-task identity so the recorded span joins
+            # 1:1 against the rendered plan and the analytical walk
+            with rec.tags(bucket=t.bucket, phase=t.phase, level=t.level,
+                          step=t.step):
+                flat = apply_collective(t.op, flat, axis, p, spec,
+                                        reduce_op=op).reshape(-1)
         if t.op == "all_gather" and flat.size > t.out_elems:
             flat = flat[:t.out_elems]
         state[t.bucket] = flat

@@ -169,6 +169,12 @@ def _decided_phase_cost(topology: Topology,
     return phase_cost
 
 
+#: public name: the telemetry residuals (`repro.obs.residuals`) price a
+#: live Communicator's schedule with this closure (the Communicator
+#: duck-types as the decision via ``spec_for_level``)
+decided_phase_cost = _decided_phase_cost
+
+
 def sequential_sync_time(topology: Topology,
                          decision: HierarchicalDecision,
                          chunk_bytes: Sequence[int]) -> float:

@@ -171,11 +171,21 @@ class TuningSession:
         return float(np.mean(devs))
 
     def retune_if_drifted(self, threshold: float = 0.2, *,
-                          n_probes: int = 8, seed: int = 0) -> bool:
+                          n_probes: int = 8, seed: int = 0,
+                          drift: Optional[float] = None) -> bool:
         """§3.2.3 environment drift: if sentinel probes deviate beyond the
         threshold, drop the stale cache so the next fit re-measures. Returns
-        True when a re-tune was triggered."""
-        if self.probe_drift(n_probes, seed=seed) <= threshold:
+        True when a re-tune was triggered.
+
+        ``drift`` substitutes an externally observed statistic for the
+        sentinel probes — the telemetry path: a production step's
+        per-tier residual drift (`repro.obs.residuals.ResidualReport
+        .drift`) costs zero extra experiments, where sentinel probing
+        spends ``n_probes * trials`` of measurement budget (STAR-MPI's
+        runtime observation vs offline re-sweeps)."""
+        observed = float(drift) if drift is not None \
+            else self.probe_drift(n_probes, seed=seed)
+        if observed <= threshold:
             return False
         self._cache.clear()
         return True

@@ -54,6 +54,9 @@ def main():
                     help="probe the live fabric before selecting a table "
                          "from a multi-backend artifact (instead of "
                          "first-table-wins)")
+    ap.add_argument("--trace-dir", default=None,
+                    help="write decode_summary.json here (per-token "
+                         "latency percentiles + throughput + config)")
     args = ap.parse_args()
 
     cfg = ARCHITECTURES[args.arch]
@@ -120,20 +123,47 @@ def main():
 
     out = []
     tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    # per-token latency: each token is synced before the next issues, so
+    # the percentiles are honest tail latencies (the number a serving
+    # SLO watches), not async dispatch times
+    tok_ms = []
     t0 = time.time()
     for _ in range(args.gen):
         out.append(tok)
+        tt0 = time.perf_counter()
         logits, cache = step(params, cache, tok)
         tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
-    jax.block_until_ready(tok)
+        jax.block_until_ready(tok)
+        tok_ms.append((time.perf_counter() - tt0) * 1e3)
     t_gen = time.time() - t0
 
     gen = jnp.concatenate(out, axis=1)
+    p50, p90, p99 = np.percentile(tok_ms, [50, 90, 99])
     print(f"arch={cfg.name} batch={B} prompt={args.prompt_len} "
           f"gen={args.gen}")
     print(f"prefill: {t_prefill:.2f}s  decode: {t_gen:.2f}s "
           f"({B * args.gen / t_gen:.1f} tok/s)")
+    print(f"per-token decode latency: p50 {p50:.2f} ms  "
+          f"p90 {p90:.2f} ms  p99 {p99:.2f} ms")
     print("sample tokens:", np.asarray(gen[0, :16]).tolist())
+
+    if args.trace_dir:
+        import os
+
+        from repro.obs import export as obs_export
+        os.makedirs(args.trace_dir, exist_ok=True)
+        obs_export.write_summary(
+            os.path.join(args.trace_dir, "decode_summary.json"),
+            counters=comm.metrics if comm is not None else None,
+            extra={"arch": cfg.name, "batch": B,
+                   "prompt_len": args.prompt_len, "gen": args.gen,
+                   "tensor_parallel": args.tensor_parallel,
+                   "prefill_s": t_prefill, "decode_s": t_gen,
+                   "tok_per_s": B * args.gen / t_gen,
+                   "token_ms_p50": float(p50),
+                   "token_ms_p90": float(p90),
+                   "token_ms_p99": float(p99)})
+        print(f"decode summary -> {args.trace_dir}/decode_summary.json")
 
 
 if __name__ == "__main__":

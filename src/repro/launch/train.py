@@ -29,6 +29,43 @@ from repro.models.registry import build_model
 from repro.optim import AdamW
 
 
+def _write_step_trace(args, comm, params, runner, topology, step,
+                      wall_ms):
+    """One step's telemetry artifacts: replay-measure the gradient-sync
+    schedule (real per-task wall times, off the critical path), join it
+    against the analytical prediction, write the Perfetto trace + the
+    flat summary, and print the drift line the re-tune loop watches."""
+    from repro.obs import export as obs_export
+    from repro.obs import replay as obs_replay
+    from repro.obs import residuals as obs_residuals
+
+    spans = obs_replay.measure_gradient_schedule(
+        comm, params, overlap_backward=args.overlap_backward,
+        runner=runner)
+    names = [lv.name for lv in topology.levels] if topology else None
+    obs_export.write_chrome_trace(
+        os.path.join(args.trace_dir, f"step{step:03d}.trace.json"),
+        spans, level_names=names)
+    resid = None
+    if topology is not None:
+        try:
+            resid = obs_residuals.gradient_residual_report(
+                comm, params, spans=spans, topology=topology,
+                overlap_backward=args.overlap_backward)
+        except ValueError as e:
+            print(f"trace: residuals skipped ({e})")
+    obs_export.write_summary(
+        os.path.join(args.trace_dir, f"step{step:03d}.summary.json"),
+        counters=comm.metrics, residuals=resid,
+        extra={"step": step, "wall_ms": wall_ms,
+               "n_tasks": len(spans)})
+    if resid is not None:
+        print(f"trace: step {step:4d} drift {resid.drift():.3f} "
+              f"(measured {resid.measured_tasks()}/{len(resid.tasks)} "
+              f"tasks, exposed comm "
+              f"{resid.modeled_exposed * 1e6:.0f} us modeled)")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-135m",
@@ -83,6 +120,18 @@ def main():
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--log-every", type=int, default=1)
+    ap.add_argument("--trace-dir", default=None,
+                    help="write per-step telemetry artifacts here: "
+                         "stepNNN.trace.json (Chrome trace-event JSON of "
+                         "the gradient-sync schedule, one track per "
+                         "(tier, stream) wire — open in Perfetto) and "
+                         "stepNNN.summary.json (counters + "
+                         "measured-vs-modeled residuals + drift). The "
+                         "schedule is re-measured standalone after each "
+                         "step (repro.obs.replay), so the numbers are "
+                         "real wall times off the critical path; "
+                         "residuals need a --topology for the modeled "
+                         "side")
     args = ap.parse_args()
 
     cfg = ARCHITECTURES[args.arch]
@@ -196,6 +245,17 @@ def main():
         else:
             print("gradient-sync plan (per leaf):")
             print(comm.explain_gradients(params).render())
+    runner = None
+    if args.trace_dir:
+        from repro.obs import replay as obs_replay
+        os.makedirs(args.trace_dir, exist_ok=True)
+        # one runner for the whole run: the per-task programs compile
+        # once and every step's replay reuses them
+        runner = obs_replay.ScheduleRunner(mesh)
+        trace_topo = topology or comm.probed_topology
+        if trace_topo is None:
+            print("trace: no --topology attached, writing traces "
+                  "without modeled residuals")
     t_start = time.time()
     for i in range(args.steps):
         batch = jax.device_put(
@@ -207,6 +267,9 @@ def main():
         if i % args.log_every == 0:
             print(f"step {i:4d} loss {loss:.4f} "
                   f"({(time.time() - t0) * 1e3:.0f} ms)", flush=True)
+        if runner is not None:
+            _write_step_trace(args, comm, params, runner, trace_topo, i,
+                              wall_ms=(time.time() - t0) * 1e3)
     print(f"done: {args.steps} steps in {time.time() - t_start:.1f}s")
 
     if args.ckpt:

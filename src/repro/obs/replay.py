@@ -1,0 +1,161 @@
+"""Standalone per-task measurement of the gradient-sync schedule.
+
+A compiled train step dispatches its collectives at trace time — inside
+``jit``/``shard_map`` there is nothing to wall-clock per task, so the
+in-step recorder captures structure, not durations. This module is the
+measurement side: it re-executes the SAME schedule the step ran — same
+bucket plan, same release order, same per-level {algorithm, segments}
+lookups — one task at a time, each as its own small jitted shard_map
+program timed with ``block_until_ready`` (STAR-MPI's runtime
+observation: measure the real fabric with the real schedule, outside
+the critical path). The resulting spans carry the full global stream
+tags, ready for the residual join and the Perfetto export.
+
+On CPU meshes (the CI topology) the measured numbers are dominated by
+dispatch overhead rather than wire time — same caveat as
+``examples/measure_real_collectives.py`` — but the MACHINERY
+(span-schedule join, per-tier occupancy, drift) is exactly what a real
+multi-host fabric feeds.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.core.collectives.dispatch import apply_collective
+from repro.obs import trace as obs_trace
+from repro.obs.trace import Span
+
+
+class ScheduleRunner:
+    """Executes one schedule task for real on a mesh and returns its
+    wall seconds. Compiled programs are cached per (op, elems, dtype,
+    axis, p, spec) so a per-step replay loop pays compilation once;
+    tracing is suspended around execution so the replayed collectives
+    are not re-recorded through the dispatch hook."""
+
+    def __init__(self, mesh, *, clock=None, trials: int = 1):
+        self.mesh = mesh
+        self.clock = clock or time.perf_counter
+        self.trials = max(1, int(trials))
+        self._cache = {}
+
+    def _build(self, op, elems, dtype, axis, p, spec):
+        def inner(x):
+            return apply_collective(op, x, axis, p, spec, reduce_op="add")
+
+        # reduce_scatter leaves each rank a 1/p shard (reassemble along
+        # the axis); all_reduce / all_gather outputs are replicated
+        out_specs = P(axis) if op == "reduce_scatter" else P()
+        fn = jax.jit(compat.shard_map(inner, mesh=self.mesh, in_specs=P(),
+                                      out_specs=out_specs,
+                                      check_vma=False))
+        x = jnp.zeros((int(elems),), jnp.dtype(dtype))
+        with obs_trace.suspended():
+            jax.block_until_ready(fn(x))         # compile + warm
+        return fn, x
+
+    def __call__(self, op, elems, dtype, axis, axis_size, spec) -> float:
+        key = (op, int(elems), str(dtype), axis, int(axis_size),
+               spec.algorithm, int(spec.segments))
+        fn_x = self._cache.get(key)
+        if fn_x is None:
+            fn_x = self._build(op, elems, dtype, axis, int(axis_size), spec)
+            self._cache[key] = fn_x
+        fn, x = fn_x
+        best = float("inf")
+        with obs_trace.suspended():
+            for _ in range(self.trials):
+                t0 = self.clock()
+                jax.block_until_ready(fn(x))
+                best = min(best, self.clock() - t0)
+        return best
+
+
+def measure_gradient_schedule(
+    comm,
+    tree,
+    *,
+    overlap_backward: bool = False,
+    bucket_bytes: Optional[int] = None,
+    n_streams: Optional[int] = None,
+    runner=None,
+    trials: int = 1,
+    clock=None,
+) -> List[Span]:
+    """Measure every task of ``comm``'s gradient-sync schedule over
+    ``tree``, one standalone execution per task, in issue order.
+
+    The walk mirrors ``Communicator._explain_gradients_streamed`` /
+    ``_bucket_plan`` exactly — with ``overlap_backward`` each release's
+    local phase chain is tagged with the GLOBAL stream schedule's
+    (bucket, step, release, stream), then the residual sync's pipeline
+    tasks follow with local tags — so the spans line up 1:1 with
+    `explain_gradients`' entries (`PlanReport.with_measured`) and with
+    the residual report's task keys. ``runner(op, elems, dtype, axis,
+    axis_size, spec) -> seconds`` replaces the real executor (tests);
+    the default is a `ScheduleRunner` on the communicator's mesh.
+    Span start times are a sequential cursor (task k+1 starts where
+    task k ended): per-tier OCCUPANCY is what the residual join
+    consumes, not cross-task concurrency."""
+    from repro.comms.bucketing import layer_slice_struct, split_release_tree
+    from repro.comms.communicator import N_STREAMS
+    from repro.core.collectives.hierarchical import _level_spec
+    from repro.core.collectives.schedule import build_stream_schedule
+
+    n_streams = n_streams or N_STREAMS
+    bb = comm._resolve_bucket_bytes(bucket_bytes)
+    if runner is None:
+        runner = ScheduleRunner(comm.mesh, clock=clock, trials=trials)
+
+    spans: List[Span] = []
+    cursor = 0.0
+
+    def run_task(t, layout, active, axes, sizes, keys, **tags):
+        nonlocal cursor
+        bobj = layout.buckets[active[t.bucket]]
+        itemsize = np.dtype(bobj.dtype).itemsize
+        axis, p = axes[t.level], sizes[t.level]
+        spec = _level_spec(comm, keys[t.level], t.op,
+                           t.in_elems * itemsize, p)
+        dur = float(runner(t.op, t.in_elems, bobj.dtype, axis, p, spec))
+        spans.append(Span(
+            kind="collective", op=t.op, nbytes=t.in_elems * itemsize,
+            axis=axis, axis_size=p, dtype=bobj.dtype,
+            algorithm=spec.algorithm, segments=int(spec.segments),
+            level=t.level, phase=t.phase, concrete=True,
+            t_start=cursor, t_end=cursor + dur, **tags))
+        cursor += dur
+
+    layers, residual = split_release_tree(tree) if overlap_backward \
+        else (None, tree)
+    if layers is not None:
+        n_layers = int(jax.tree.leaves(layers)[0].shape[0])
+        layout, active, sched, axes, sizes, keys, _hier = \
+            comm._bucket_plan(layer_slice_struct(layers), bb)
+        elems = [layout.buckets[i].elems for i in active]
+        stream_sched = build_stream_schedule(
+            elems * n_layers, sizes,
+            releases=[r for r in range(n_layers) for _ in active],
+            n_streams=n_streams)
+        by_bp = {(t.bucket, t.phase): t for t in stream_sched.tasks}
+        for r in range(n_layers):
+            base = r * len(active)
+            for t in sched.tasks:
+                st = by_bp[(base + t.bucket, t.phase)]
+                run_task(t, layout, active, axes, sizes, keys,
+                         bucket=base + t.bucket, step=st.step,
+                         release=r, stream=st.stream)
+    if residual is not None and jax.tree.leaves(residual):
+        layout, active, sched, axes, sizes, keys, _hier = \
+            comm._bucket_plan(residual, bb)
+        for t in sched.tasks:
+            run_task(t, layout, active, axes, sizes, keys,
+                     bucket=active[t.bucket], step=t.step)
+    return spans

@@ -1,0 +1,42 @@
+"""Shared fixtures for the telemetry / timing tests.
+
+``fake_clock`` is the injectable deterministic timer both the probe
+timing paths (`repro.comms.probe._time_pair(clock=...)`) and the
+`TraceRecorder(clock=...)` consume, so wall-clock-dependent code is
+tested without sleeping or flaking. ``fake_collectives`` swaps the
+algorithm registry for shape-correct eager stand-ins (reduce_scatter
+sums the p chunks, all_reduce scales, all_gather tiles), so the
+bucketed executor, the release sink and the dispatch trace hook run
+end-to-end on a single host with no mesh.
+"""
+import jax.numpy as jnp
+import pytest
+
+from repro.obs import FakeClock
+
+
+@pytest.fixture
+def fake_clock():
+    """A deterministic perf_counter stand-in: every read advances 1 us."""
+    return FakeClock(step=1e-6)
+
+
+@pytest.fixture
+def fake_collectives(monkeypatch):
+    """Replace the collective-algorithm registry with eager fakes that
+    keep the dispatch contract (output shapes, keyword signatures) so
+    schedules execute concretely without devices."""
+    from repro.core.collectives import algorithms as alg
+
+    def fake_get(op, algorithm):
+        if op == "reduce_scatter":
+            return lambda x, axis, p, segments=1, op="add": \
+                x.reshape(p, -1).sum(0)
+        if op in ("all_reduce", "reduce"):
+            return lambda x, axis, p, segments=1, op="add": x * p
+        if op == "all_gather":
+            return lambda x, axis, p, segments=1: jnp.tile(x, p)
+        raise KeyError(op)
+
+    monkeypatch.setattr(alg, "get", fake_get)
+    return fake_get
