@@ -8,10 +8,11 @@
 #   make test   - the full tier-1 suite (~8 min).
 #   make bench  - every benchmark table (CSV to stdout).
 #   make bench-smoke - hierarchy_vs_flat + tuner_budget + gradsync_pipeline
-#                 in reduced-size mode (BENCH_SMOKE=1): the perf
+#                 + serving in reduced-size mode (BENCH_SMOKE=1): the perf
 #                 assertions (tuned-hier beats tuned-flat; shared cache
-#                 beats cold; bucketed+pipelined sync beats per-leaf)
-#                 in seconds, for CI. --gate additionally compares fresh
+#                 beats cold; bucketed+pipelined sync beats per-leaf;
+#                 continuous batching beats fixed-batch drain with p99
+#                 under SLO) in seconds, for CI. --gate additionally compares fresh
 #                 speedup= ratios against the committed BENCH_*_smoke
 #                 snapshots and fails on a >15% regression; telemetry
 #                 artifacts (Perfetto trace + residual summary) land in
@@ -35,8 +36,9 @@ bench:
 
 bench-smoke:
 	BENCH_SMOKE=1 PYTHONPATH=src:. $(PY) benchmarks/run.py \
-		--only hierarchy_vs_flat tuner_budget gradsync_pipeline --gate
+		--only hierarchy_vs_flat tuner_budget gradsync_pipeline serving \
+		--gate
 
 bench-snapshot:
 	BENCH_SMOKE=1 PYTHONPATH=src:. $(PY) benchmarks/run.py \
-		--only gradsync_pipeline --json
+		--only gradsync_pipeline serving --json

@@ -24,6 +24,7 @@ from benchmarks import (
     overlap,
     quadtree_encoding,
     roofline_report,
+    serving,
     star_adaptation,
     tuner_budget,
     umtac_pipeline,
@@ -43,6 +44,7 @@ SUITES = {
     "gradsync_pipeline": gradsync_pipeline,           # §4.1 bucketed sync
     "kernel_bench": kernel_bench,                     # kernels layer
     "roofline_report": roofline_report,               # dry-run artifacts
+    "serving": serving,                               # continuous batching
 }
 
 

@@ -1,0 +1,112 @@
+"""Serving matrix: continuous batching vs fixed-batch drain, per family.
+
+The same Poisson request trace is served twice through real (reduced)
+models on the `repro.serve` engine — once with the drain policy (the
+whole batch retires before the next one is admitted: the fixed-batch
+baseline) and once with continuous batching (token-budget + SLO
+admission, mid-flight join/retire over paged KV blocks). Timing is the
+engine's injected deterministic cost model, so the throughput ratio is
+a property of the *scheduling policy*, stable across machines — the
+``speedup=`` column the smoke gate compares. Raw us/token is real
+host-dependent compute and is not gated.
+
+Asserts the two serving claims CI cares about: continuous batching does
+not lose throughput to the drain baseline on any family, and its p99
+inter-token latency stays under the SLO the admission policy was given.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHITECTURES
+from repro.models.registry import build_model
+from repro.serve import ServeEngine, Scheduler, synthetic_trace
+
+from benchmarks.common import row
+
+#: BENCH_SMOKE=1 (the `make bench-smoke` CI tier) shrinks the trace and
+#: the two tiers write different snapshots (JSON_NAME), so they gate
+#: independently.
+SMOKE = os.environ.get("BENCH_SMOKE") == "1"
+JSON_NAME = "serving_smoke" if SMOKE else "serving"
+
+#: one representative architecture per registry family
+ARCHS = ("smollm-135m", "zamba2-2.7b", "whisper-large-v3",
+         "olmoe-1b-7b", "mamba2-130m", "llava-next-mistral-7b")
+
+NUM_REQUESTS = 5 if SMOKE else 12
+MAX_ACTIVE = 2 if SMOKE else 4
+BLOCK = 4
+# two distinct prompt lengths keeps the per-shape prefill jits bounded
+PROMPT_LENS = (4, 8) if SMOKE else (4, 8, 16)
+RATE_RPS = 200.0
+SLO_MS = 10.0
+
+
+def _cost_model(kind, n):
+    """Deterministic simulated step costs (seconds): prefill grows with
+    prompt length; a decode step is one fixed tick."""
+    if kind == "prefill":
+        return 1e-3 + 2e-5 * n
+    return 1.5e-3
+
+
+def _trace(vocab):
+    tr = synthetic_trace(NUM_REQUESTS, rate_rps=RATE_RPS, vocab=vocab,
+                         prompt_lens=PROMPT_LENS, max_new=8, seed=0)
+    # stagger retirement so mid-flight backfill has slots to fill —
+    # uniform max_new would retire whole cohorts at once and hide the
+    # continuous-vs-drain difference
+    for r in tr:
+        r.max_new = 3 + 2 * (r.rid % 3)
+    return tr
+
+
+def _prefill_extra(cfg):
+    if cfg.family != "encdec":
+        return None
+
+    def mk(req):
+        rng = np.random.default_rng(1000 + req.rid)
+        return {"audio": jnp.asarray(
+            rng.normal(size=(1, cfg.encoder_seq, cfg.d_model)),
+            jnp.bfloat16)}
+    return mk
+
+
+def _serve(api, params, cfg, *, drain):
+    trace = _trace(cfg.vocab_size)
+    view_len = -(-max(r.prompt_len + r.max_new for r in trace)
+                 // BLOCK) * BLOCK
+    engine = ServeEngine(api, params, max_active=MAX_ACTIVE,
+                         view_len=view_len, block_size=BLOCK,
+                         prefill_extra=_prefill_extra(cfg))
+    sched = Scheduler(trace, max_active=MAX_ACTIVE,
+                      token_budget=MAX_ACTIVE * view_len,
+                      slo_ms=None if drain else SLO_MS, drain=drain)
+    return engine.run(sched, cost_model=_cost_model)
+
+
+def run():
+    for arch in ARCHS:
+        cfg = ARCHITECTURES[arch].reduced()
+        api = build_model(cfg, attn_impl="xla")
+        params = api.init(jax.random.PRNGKey(0))
+        fixed = _serve(api, params, cfg, drain=True)
+        cont = _serve(api, params, cfg, drain=False)
+        f_tps = fixed.summary["tok_per_s"]
+        c_tps = cont.summary["tok_per_s"]
+        speedup = c_tps / f_tps
+        p99 = cont.summary["token_ms_p99"]
+        row(f"serving/{cfg.family}/fixed_batch", 1e6 / f_tps,
+            f"tok_per_s={f_tps:.1f}")
+        row(f"serving/{cfg.family}/continuous", 1e6 / c_tps,
+            f"speedup={speedup:.2f}x;p99_ms={p99:.2f};slo_ms={SLO_MS:.0f}")
+        assert c_tps >= f_tps, \
+            (f"{cfg.family}: continuous batching lost throughput "
+             f"({c_tps:.1f} vs fixed {f_tps:.1f} tok/s)")
+        assert p99 <= SLO_MS, \
+            (f"{cfg.family}: continuous p99 {p99:.2f} ms busts the "
+             f"{SLO_MS:.0f} ms SLO")

@@ -27,7 +27,12 @@ from repro.core.tuning import (
 
 OPS = ("all_reduce", "all_gather", "all_to_all")
 PS = (4, 16, 64, 256)
-MS = tuple(1024 * 4 ** i for i in range(7))
+# the coarse training-regime sweep (4 KB..4 MB x4) densified with the
+# KB-scale decode regime, so the artifact serves both the gradient-sync
+# launchers and the per-token serving collectives
+from repro.core.tuning.space import DECODE_MESSAGE_SIZES
+MS = tuple(sorted(set(1024 * 4 ** i for i in range(7))
+                  | set(DECODE_MESSAGE_SIZES)))
 
 TUNER_NAMES = ("exhaustive", "thinned", "smgd", "regression", "ann",
                "ensemble", "decision_tree", "quadtree", "octree", "star",

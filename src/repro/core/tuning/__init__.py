@@ -17,6 +17,7 @@ from repro.core.tuning.session import (
 )
 from repro.core.tuning.simulator import NetworkProfile, NetworkSimulator, drifted
 from repro.core.tuning.space import (
+    DECODE_MESSAGE_SIZES,
     MESSAGE_SIZES,
     OPS,
     PROCESS_COUNTS,

@@ -20,8 +20,18 @@ TUNABLE: Dict[str, List[str]] = {
 
 SEGMENT_CANDIDATES = (1, 2, 4, 8, 16, 32, 64)
 
-#: default experiment grid (bytes) — powers of four from 256 B to 256 MB
-MESSAGE_SIZES = tuple(256 * 4 ** i for i in range(10))
+#: the small-message decode regime: per-token serving collectives (TP logits
+#: all-gather, residual all-reduce at batch x d_model) are KB-scale, where
+#: latency dominates and the optimal algorithm flips vs the MB training
+#: regime — powers of two from 1 KB to 1 MB
+DECODE_MESSAGE_SIZES = tuple(1024 * 2 ** i for i in range(11))
+
+#: default experiment grid (bytes) — the coarse powers-of-four sweep from
+#: 256 B to 64 MB, densified with the decode regime so every KB-scale
+#: serving message resolves to a nearby tuned point instead of snapping
+#: across the latency/bandwidth knee
+MESSAGE_SIZES = tuple(sorted(set(256 * 4 ** i for i in range(10))
+                             | set(DECODE_MESSAGE_SIZES)))
 
 PROCESS_COUNTS = (2, 4, 8, 16, 32, 64, 128, 256)
 

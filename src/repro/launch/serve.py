@@ -1,17 +1,28 @@
-"""Serving launcher: batched greedy decode against a KV cache.
+"""Serving launcher: fixed-batch oracle + continuous batching over paged KV.
 
-With ``--tensor-parallel N --tuning-table ART`` the decode loop runs the
-tuned tensor-parallel path: every token's logits assembly goes through the
-`Communicator`'s {algorithm, segments} choice for the all-gather
-(vocab-parallel shards) or all-reduce (partial sums) — bit-identical to
-the untuned loop, but executing the tuned wire schedule. The printed
-decode plan is `Communicator.explain` over the same requests the step
-executes. ``--probe-fabric`` probes the live fabric first so a
-multi-backend artifact resolves to the matching profile's table.
+Two modes share one model API and one tuned-collective path:
+
+  * default (oracle) — one fixed batch prefilled in a single batched pass
+    (``api.prefill``) and greedily decoded to completion. This is the
+    validation oracle the continuous path is tested against.
+  * ``--continuous`` — the ``repro.serve`` subsystem: a request trace
+    (``--request-trace`` JSONL or synthetic Poisson arrivals), paged KV
+    blocks, token-budget + SLO admission, per-step join/retire.
+
+With ``--tensor-parallel N --tuning-table ART`` either mode's per-token
+logits assembly goes through the `Communicator`'s {algorithm, segments}
+choice — bit-identical to the untuned loop, but executing the tuned wire
+schedule. Decode messages are KB-scale, so they resolve through the
+small-message end of the tuning grid; the printed decode plan is
+`Communicator.explain` over the same requests the step executes.
+``--probe-fabric`` probes the live fabric first so a multi-backend
+artifact resolves to the matching profile's table.
 
 Examples:
     python -m repro.launch.serve --arch smollm-135m --reduced \\
         --prompt-len 32 --gen 32 --batch 4
+    python -m repro.launch.serve --arch smollm-135m --reduced \\
+        --continuous --num-requests 16 --poisson-rate 50 --slo-ms 200
     XLA_FLAGS=--xla_force_host_platform_device_count=2 \\
         python -m repro.launch.serve --arch smollm-135m --reduced \\
         --tensor-parallel 2 --tuning-table tuned_decision.json
@@ -29,6 +40,73 @@ from repro.configs import ARCHITECTURES
 from repro.models.registry import build_model
 
 
+def _prefill_extra_fn(cfg):
+    """Per-request inputs beyond the token prompt (encdec: audio)."""
+    if cfg.family != "encdec":
+        return None
+
+    def mk(req):
+        rng = np.random.default_rng(1000 + req.rid)
+        return {"audio": jnp.asarray(
+            rng.normal(size=(1, cfg.encoder_seq, cfg.d_model)),
+            jnp.bfloat16)}
+    return mk
+
+
+def _serve_continuous(args, cfg, api, params, comm, mesh):
+    from repro.obs import export as obs_export
+    from repro.serve import ServeEngine, Scheduler, load_trace, \
+        synthetic_trace
+
+    if args.request_trace:
+        trace = load_trace(args.request_trace, vocab=cfg.vocab_size)
+    else:
+        trace = synthetic_trace(
+            args.num_requests, rate_rps=args.poisson_rate,
+            vocab=cfg.vocab_size,
+            prompt_lens=(max(args.prompt_len // 4, 1),
+                         max(args.prompt_len // 2, 1), args.prompt_len),
+            max_new=args.gen, seed=0)
+
+    bs = args.block_size
+    longest = max(r.prompt_len + r.max_new for r in trace)
+    view_len = -(-longest // bs) * bs
+    engine = ServeEngine(api, params, max_active=args.max_active,
+                         view_len=view_len, block_size=bs,
+                         mesh=mesh, comm=comm,
+                         collective=args.tp_collective,
+                         prefill_extra=_prefill_extra_fn(cfg))
+    sched = Scheduler(trace, max_active=args.max_active,
+                      token_budget=args.max_active * view_len,
+                      slo_ms=args.slo_ms)
+    print(f"continuous serving: arch={cfg.name} requests={len(trace)} "
+          f"max_active={args.max_active} block={bs} view={view_len} "
+          f"slo_ms={args.slo_ms}")
+    res = engine.run(sched)
+    s = res.summary
+    print(f"served {s['requests']} requests, {s['new_tokens']} tokens "
+          f"in {res.wall_s:.2f}s ({s['tok_per_s']:.1f} tok/s)")
+    print(f"per-token decode latency: p50 {s['token_ms_p50']:.2f} ms  "
+          f"p90 {s['token_ms_p90']:.2f} ms  p99 {s['token_ms_p99']:.2f} ms")
+    if args.slo_ms:
+        ok = s["token_ms_p99"] <= args.slo_ms
+        print(f"SLO p99 <= {args.slo_ms:.0f} ms: "
+              f"{'met' if ok else 'MISSED'}")
+
+    if args.trace_dir:
+        import os
+        os.makedirs(args.trace_dir, exist_ok=True)
+        obs_export.write_summary(
+            os.path.join(args.trace_dir, "decode_summary.json"),
+            counters=comm.metrics if comm is not None else None,
+            extra={"arch": cfg.name, "mode": "continuous",
+                   "tensor_parallel": args.tensor_parallel,
+                   "max_active": args.max_active, "block_size": bs,
+                   "view_len": view_len, "slo_ms": args.slo_ms,
+                   "wall_s": res.wall_s, **s, "requests": res.records})
+        print(f"decode summary -> {args.trace_dir}/decode_summary.json")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-135m",
@@ -38,6 +116,25 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--window", type=int, default=0)
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve a request trace with continuous batching "
+                         "over paged KV (the repro.serve subsystem) instead "
+                         "of one fixed batch")
+    ap.add_argument("--request-trace", default=None,
+                    help="JSONL request trace ({arrival_s, prompt_len|"
+                         "prompt, max_new} per line); default: synthetic "
+                         "Poisson arrivals")
+    ap.add_argument("--num-requests", type=int, default=16,
+                    help="synthetic trace length (--continuous)")
+    ap.add_argument("--poisson-rate", type=float, default=50.0,
+                    help="synthetic arrival rate, requests/s (--continuous)")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="per-token latency SLO; admission defers prefills "
+                         "that would bust it (--continuous)")
+    ap.add_argument("--max-active", type=int, default=4,
+                    help="request slots decoded per step (--continuous)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="KV block size in tokens (--continuous)")
     ap.add_argument("--tuning-table", default=None,
                     help="tuned decision artifact (schema 2 or 3); prints "
                          "the tuned collective plan and, with "
@@ -56,7 +153,8 @@ def main():
                          "first-table-wins)")
     ap.add_argument("--trace-dir", default=None,
                     help="write decode_summary.json here (per-token "
-                         "latency percentiles + throughput + config)")
+                         "latency percentiles + throughput + config; "
+                         "with --continuous also per-request spans)")
     args = ap.parse_args()
 
     cfg = ARCHITECTURES[args.arch]
@@ -76,8 +174,9 @@ def main():
         # decode-time collectives: per-token TP all-reduce of the residual
         # (B, d) and all-gather of vocab-parallel logits (B, V/p)
         p = args.tensor_parallel or max(jax.device_count(), 2)
+        batch = args.max_active if args.continuous else args.batch
         print(f"  decode plan p={p}")
-        print(tp_decode_plan(comm, args.batch, cfg.d_model,
+        print(tp_decode_plan(comm, batch, cfg.d_model,
                              cfg.vocab_size, p).render(indent="    "))
     api = build_model(cfg, window=args.window,
                       attn_impl="xla" if jax.default_backend() != "tpu"
@@ -86,38 +185,50 @@ def main():
     B = args.batch
     cache_len = args.prompt_len + args.gen
 
-    rng = np.random.default_rng(0)
-    prompt = jnp.asarray(rng.integers(0, cfg.vocab_size,
-                                      (B, args.prompt_len)), jnp.int32)
-
+    mesh = None
     if args.tensor_parallel >= 2:
         if comm is None:
             raise SystemExit("--tensor-parallel needs --tuning-table")
         from repro import compat
-        from repro.launch.tp_decode import build_tp_decode_step, executed_spec
+        from repro.launch.tp_decode import executed_spec
         tp = args.tensor_parallel
         if jax.device_count() < tp:
             raise SystemExit(f"{tp}-way tensor parallelism needs {tp} "
                              f"devices, have {jax.device_count()} (set "
                              "XLA_FLAGS=--xla_force_host_platform_device_"
                              f"count={tp})")
-        tp_mesh = compat.make_mesh((tp,), ("model",))
-        step = build_tp_decode_step(api, tp_mesh, comm,
-                                    collective=args.tp_collective)
+        mesh = compat.make_mesh((tp,), ("model",))
+        batch = args.max_active if args.continuous else args.batch
         nbytes, spec = executed_spec(comm, args.tp_collective,
-                                     args.batch, cfg.vocab_size, tp)
+                                     batch, cfg.vocab_size, tp)
         print(f"tensor-parallel decode: p={tp} via tuned "
               f"{args.tp_collective} ({nbytes} B -> {spec.algorithm} "
               f"segments={spec.segments})")
+
+    if args.continuous:
+        _serve_continuous(args, cfg, api, params, comm, mesh)
+        return
+
+    # ---- fixed-batch validation oracle ----------------------------------
+    if mesh is not None:
+        from repro.launch.tp_decode import build_tp_decode_step
+        step = build_tp_decode_step(api, mesh, comm,
+                                    collective=args.tp_collective)
     else:
         step = jax.jit(api.decode_step)
-    cache = api.init_cache(B, cache_len)
 
-    # prefill by stepping the prompt (uniform across families)
+    rng = np.random.default_rng(0)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                      (B, args.prompt_len)), jnp.int32)
+
+    # one real batched prefill pass (the same path the scheduler uses)
+    extra = {}
+    if cfg.family == "encdec":
+        extra["audio"] = jnp.asarray(
+            rng.normal(size=(B, cfg.encoder_seq, cfg.d_model)), jnp.bfloat16)
     t0 = time.time()
-    tok = prompt[:, :1]
-    for i in range(args.prompt_len):
-        logits, cache = step(params, cache, prompt[:, i:i + 1])
+    logits, cache = api.prefill(params, prompt, cache_len, **extra)
+    logits = logits[:, -1]
     jax.block_until_ready(logits)
     t_prefill = time.time() - t0
 

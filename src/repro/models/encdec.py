@@ -169,6 +169,48 @@ def prime_cross(params, audio, cfg: ModelConfig, cache, *,
     return {**cache, "xk": xk, "xv": xv}
 
 
+def prefill(params, tokens, cfg: ModelConfig, cache_len: int, *, audio,
+            compute_dtype=jnp.bfloat16, attn_impl="auto",
+            unroll: bool = False, **_):
+    """Encode ``audio`` and run the decoder prompt, returning logits and a
+    primed cache (self-attention KV at the head, cross KV filled)."""
+    cd = compute_dtype
+    B, S = tokens.shape
+    enc = encode(params, audio, cfg, compute_dtype=cd, attn_impl=attn_impl)
+    pos_tab = params["embed"]["pos"]
+    x = params["embed"]["tok"].astype(cd)[tokens] + \
+        pos_tab[jnp.arange(S) % pos_tab.shape[0]].astype(cd)[None]
+    positions = jnp.arange(S)
+
+    def body(x, lp):
+        h = _apply_ln(x, lp["ln1"], cfg.norm_eps)
+        attn, kv = L.attention_block(h, lp["self_attn"], cfg, positions,
+                                     causal=True, return_kv=True,
+                                     compute_dtype=cd, attn_impl=attn_impl)
+        x = x + attn
+        h = _apply_ln(x, lp["ln2"], cfg.norm_eps)
+        ckv = _cross_kv(enc, lp["cross_attn"], cd)
+        x = x + _cross_attn(h, lp["cross_attn"], ckv, cfg, cd)
+        h = _apply_ln(x, lp["ln3"], cfg.norm_eps)
+        x = x + L.mlp_block(h, lp["mlp"], gated=False, compute_dtype=cd)
+        return x, (kv["k"].astype(cd), kv["v"].astype(cd),
+                   ckv["k"].astype(jnp.bfloat16), ckv["v"].astype(jnp.bfloat16))
+
+    x, (ks, vs, xks, xvs) = L.layer_scan(body, x, params["decoder"],
+                                         unroll=unroll)
+    logits = T.logits_fn(params, x, cfg, cd)
+    pad = cache_len - S
+    assert pad >= 0
+    widths = [(0, 0), (0, 0), (0, pad), (0, 0), (0, 0)]
+    return logits, {
+        "k": jnp.pad(ks, widths),
+        "v": jnp.pad(vs, widths),
+        "xk": xks,
+        "xv": xvs,
+        "length": jnp.asarray(S, jnp.int32),
+    }
+
+
 def decode_step(params, cache, tokens, cfg: ModelConfig, *,
                 compute_dtype=jnp.bfloat16, unroll: bool = False, **_):
     cd = compute_dtype

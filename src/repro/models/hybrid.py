@@ -45,10 +45,11 @@ def _group_slices(params_layers, cfg: ModelConfig):
 
 
 def _shared_attn(x, sp, cfg, positions, *, window, kv, compute_dtype,
-                 attn_impl):
+                 attn_impl, return_kv=False):
     h = L.rms_norm(x, sp["ln1"], cfg.norm_eps)
     attn, new_kv = L.attention_block(h, sp["attn"], cfg, positions,
                                      causal=True, window=window, kv_cache=kv,
+                                     return_kv=return_kv,
                                      compute_dtype=compute_dtype,
                                      attn_impl=attn_impl)
     x = x + attn
@@ -142,3 +143,42 @@ def decode_step(params, cache, tokens, cfg: ModelConfig, *, window=0,
         "length": length + 1,
     }
     return logits, new_cache
+
+
+def prefill(params, tokens, cfg: ModelConfig, cache_len: int, *, window=0,
+            compute_dtype=jnp.bfloat16, ssd_impl="auto", attn_impl="auto",
+            unroll: bool = False, **_):
+    """Run the prompt, returning logits and a primed cache."""
+    B, S_len = tokens.shape
+    x = T.embed_tokens(params, tokens, cfg, compute_dtype)
+    positions = jnp.arange(S_len)
+
+    def mamba_body(x, lp):
+        h = L.rms_norm(x, lp["ln"], cfg.norm_eps)
+        y, ns = S.ssm_block(h, lp["ssm"], cfg, compute_dtype=compute_dtype,
+                            ssd_impl=ssd_impl, return_state=True)
+        return x + y, (ns["conv"], ns["ssd"])
+
+    convs, ssds, ks, vs = [], [], [], []
+    for grp in _group_slices(params["layers"], cfg):
+        x, (nc, ns) = L.layer_scan(mamba_body, x, grp, unroll=unroll)
+        x, kv = _shared_attn(x, params["shared"], cfg, positions,
+                             window=window, kv=None,
+                             compute_dtype=compute_dtype, attn_impl=attn_impl,
+                             return_kv=True)
+        convs.append(nc)
+        ssds.append(ns)
+        ks.append(kv["k"].astype(compute_dtype))
+        vs.append(kv["v"].astype(compute_dtype))
+
+    logits = T.logits_fn(params, x, cfg, compute_dtype)
+    pad = cache_len - S_len
+    assert pad >= 0
+    widths = [(0, 0), (0, 0), (0, pad), (0, 0), (0, 0)]
+    cache = {
+        "ssm": {"conv": jnp.concatenate(convs), "ssd": jnp.concatenate(ssds)},
+        "k": jnp.pad(jnp.stack(ks), widths),
+        "v": jnp.pad(jnp.stack(vs), widths),
+        "length": jnp.asarray(S_len, jnp.int32),
+    }
+    return logits, cache

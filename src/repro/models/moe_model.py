@@ -159,3 +159,32 @@ def decode_step(params, cache, tokens, cfg: ModelConfig, *, window=0,
                                          cache["v"]), unroll=unroll)
     logits = T.logits_fn(params, x, cfg, compute_dtype)[:, 0]
     return logits, {"k": nk, "v": nv, "length": length + 1}
+
+
+def prefill(params, tokens, cfg: ModelConfig, cache_len: int, *, window=0,
+            ep_axis=None, mesh=None, compute_dtype=jnp.bfloat16,
+            attn_impl="auto", **_):
+    """Run the prompt, returning logits and a primed cache."""
+    B, S = tokens.shape
+    x = T.embed_tokens(params, tokens, cfg, compute_dtype)
+    positions = jnp.arange(S)
+
+    def body(x, lp):
+        y, kv, _ = _layer(x, lp, cfg, positions, window=window, kv=None,
+                          ep_axis=ep_axis, mesh=mesh,
+                          compute_dtype=compute_dtype, attn_impl=attn_impl,
+                          return_kv=True)
+        return y, (kv["k"].astype(compute_dtype),
+                   kv["v"].astype(compute_dtype))
+
+    x, (ks, vs) = L.layer_scan(body, x, params["layers"])
+    logits = T.logits_fn(params, x, cfg, compute_dtype)
+    pad = cache_len - S
+    assert pad >= 0
+    widths = [(0, 0), (0, 0), (0, pad), (0, 0), (0, 0)]
+    cache = {
+        "k": jnp.pad(ks, widths),
+        "v": jnp.pad(vs, widths),
+        "length": jnp.asarray(S, jnp.int32),
+    }
+    return logits, cache

@@ -20,6 +20,9 @@ class ModelAPI:
     loss: Callable[[Any, dict], tuple]              # (params, batch) -> (loss, aux)
     init_cache: Optional[Callable[[int, int], Any]]  # (batch, cache_len) -> cache
     decode_step: Optional[Callable[[Any, Any, Any], tuple]]
+    # (params, tokens, cache_len, **extra) -> (logits (B,S,V), primed cache);
+    # extra carries per-family inputs (encdec: audio=...)
+    prefill: Optional[Callable[..., tuple]] = None
 
 
 _FAMILY = {
@@ -74,12 +77,26 @@ def build_model(
     init_cache = functools.partial(mod.init_cache, cfg) \
         if hasattr(mod, "init_cache") else None
 
+    # token-prompt prefill for serving; vlm decodes past the prefix as pure
+    # text, so its serving prefill is the dense one (the batch-dict
+    # [patches|tokens] prefill stays available as vlm.prefill)
+    pmod = transformer if cfg.family == "vlm" else mod
+    prefill = None
+    if hasattr(pmod, "prefill"):
+        pkw = {k: v for k, v in fkw.items()
+               if k in ("compute_dtype", "window", "attn_impl", "ssd_impl",
+                        "ep_axis", "mesh", "unroll")}
+
+        def prefill(params, tokens, cache_len, *, _mod=pmod, _kw=pkw, **extra):
+            return _mod.prefill(params, tokens, cfg, cache_len, **_kw, **extra)
+
     return ModelAPI(
         cfg=cfg,
         init=functools.partial(mod.init_params, cfg=cfg, dtype=param_dtype),
         loss=loss,
         init_cache=init_cache,
         decode_step=decode,
+        prefill=prefill,
     )
 
 

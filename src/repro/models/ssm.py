@@ -84,8 +84,11 @@ def ssm_block(
     compute_dtype=jnp.bfloat16,
     ssd_impl: str = "auto",
     state=None,                   # decode: {"conv": (B,W-1,Cd), "ssd": (B,H,N,P)}
+    return_state: bool = False,   # prefill: sequence mode + final decode state
 ):
-    """Returns (out, new_state) — new_state None unless ``state`` given."""
+    """Returns (out, new_state) — new_state None unless ``state`` given or
+    ``return_state`` (prefill: sequence-mode outputs plus the conv/ssd state
+    a subsequent ``decode_step`` continues from)."""
     cd = compute_dtype
     B_, S, _ = x.shape
     H, N, P = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
@@ -98,13 +101,33 @@ def ssm_block(
 
     new_state = None
     if state is None:
-        xBC, _ = _causal_conv(xBC, p["conv_w"].astype(cd), p["conv_b"].astype(cd))
+        if return_state:
+            # zero conv state == the zero-padding of the stateless path, so
+            # outputs are bit-identical AND we get the final conv history.
+            zero = jnp.zeros((B_, p["conv_w"].shape[0] - 1, xBC.shape[-1]),
+                             jnp.bfloat16)
+            xBC, conv_state = _causal_conv(xBC, p["conv_w"].astype(cd),
+                                           p["conv_b"].astype(cd), zero)
+        else:
+            xBC, conv_state = _causal_conv(xBC, p["conv_w"].astype(cd),
+                                           p["conv_b"].astype(cd))
         xs = xBC[..., :di].reshape(B_, S, H, P)
         Bm = xBC[..., di:di + N]
         Cm = xBC[..., di + N:]
         y = ops.ssd(xs, dt, A, Bm, Cm, p["D"].astype(jnp.float32),
                     chunk=min(cfg.ssm_chunk, S), impl=ssd_impl)
         y = y.reshape(B_, S, di)
+        if return_state:
+            # closed form of the decode recurrence
+            #   state_t = state_{t-1} * exp(dt_t A) + dt_t B_t (x) x_t
+            # after S steps: state_S = sum_t exp(A (D_S - D_t)) dt_t B_t x_t
+            # with D the inclusive cumsum of dt.
+            cum = jnp.cumsum(dt, axis=1)                       # (B,S,H)
+            decay = jnp.exp((cum[:, -1:] - cum) * A[None, None, :])
+            ssd_state = jnp.einsum(
+                "bsh,bsn,bshp->bhnp", dt * decay,
+                Bm.astype(jnp.float32), xs.astype(jnp.float32))
+            new_state = {"conv": conv_state, "ssd": ssd_state}
     else:
         xBC, conv_state = _causal_conv(xBC, p["conv_w"].astype(cd),
                                        p["conv_b"].astype(cd), state["conv"])
@@ -201,4 +224,23 @@ def decode_step(params, cache, tokens, cfg: ModelConfig, *,
         body, x, (params["layers"], cache["conv"], cache["ssd"]),
         unroll=unroll)
     logits = T.logits_fn(params, x, cfg, compute_dtype)[:, 0]
+    return logits, {"conv": nc, "ssd": nss}
+
+
+def prefill(params, tokens, cfg: ModelConfig, cache_len: int, *,
+            compute_dtype=jnp.bfloat16, ssd_impl="auto",
+            unroll: bool = False, **_):
+    """Run the prompt in sequence mode, returning (logits, decode state)."""
+    from repro.models import transformer as T
+    del cache_len  # O(1) state
+    x = T.embed_tokens(params, tokens, cfg, compute_dtype)
+
+    def body(x, lp):
+        h = L.rms_norm(x, lp["ln"], cfg.norm_eps)
+        y, ns = ssm_block(h, lp["ssm"], cfg, compute_dtype=compute_dtype,
+                          ssd_impl=ssd_impl, return_state=True)
+        return x + y, (ns["conv"], ns["ssd"])
+
+    x, (nc, nss) = L.layer_scan(body, x, params["layers"], unroll=unroll)
+    logits = T.logits_fn(params, x, cfg, compute_dtype)
     return logits, {"conv": nc, "ssd": nss}

@@ -125,7 +125,8 @@ def decode_step(
 
 
 def prefill(params, tokens, cfg: ModelConfig, cache_len: int, *,
-            window: int = 0, compute_dtype=jnp.bfloat16, attn_impl="auto"):
+            window: int = 0, compute_dtype=jnp.bfloat16, attn_impl="auto",
+            unroll: bool = False, **_):
     """Run the prompt, returning logits and a primed cache."""
     B, S = tokens.shape
     x = embed_tokens(params, tokens, cfg, compute_dtype)
@@ -137,7 +138,7 @@ def prefill(params, tokens, cfg: ModelConfig, cache_len: int, *,
                        return_kv=True)
         return y, (kv["k"].astype(compute_dtype), kv["v"].astype(compute_dtype))
 
-    x, (ks, vs) = L.layer_scan(body, x, params["layers"])
+    x, (ks, vs) = L.layer_scan(body, x, params["layers"], unroll=unroll)
     logits = logits_fn(params, x, cfg, compute_dtype)
     # place the prompt at the head of a cache_len cache
     pad = cache_len - S

@@ -74,6 +74,53 @@ def test_serve_cli_tp_tuned_2dev():
     assert "tok/s" in r.stdout
 
 
+def test_serve_cli_continuous(tmp_path):
+    """--continuous: Poisson trace through the repro.serve subsystem,
+    per-request spans exported next to the run summary."""
+    import json as _json
+    r = _run(["repro.launch.serve", "--arch", "smollm-135m", "--reduced",
+              "--continuous", "--num-requests", "6", "--poisson-rate",
+              "200", "--prompt-len", "8", "--gen", "6",
+              "--max-active", "2", "--block-size", "4",
+              "--trace-dir", str(tmp_path)])
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "continuous serving: arch=smollm-135m requests=6" in r.stdout
+    assert "served 6 requests" in r.stdout
+    doc = _json.loads((tmp_path / "decode_summary.json").read_text())
+    assert doc["mode"] == "continuous"
+    assert doc["requests"] and len(doc["requests"]) == 6
+    for rec in doc["requests"]:
+        assert rec["new_tokens"] == 6
+        assert rec["ttft_ms"] >= 0.0 and rec["finish_s"] >= rec["admit_s"]
+
+
+def test_serve_cli_continuous_tp_slo_8dev(tmp_path):
+    """Nightly e2e: continuous batching + 2-way tensor parallelism on 8
+    simulated devices, SLO-aware admission, decode collectives routed
+    through the committed tuned table (the small-message grid points)."""
+    import json as _json
+    art = os.path.join(HERE, "..", "examples", "artifacts",
+                       "tuned_decision.json")
+    r = _run(["repro.launch.serve", "--arch", "smollm-135m", "--reduced",
+              "--continuous", "--num-requests", "6", "--poisson-rate",
+              "200", "--prompt-len", "8", "--gen", "6",
+              "--max-active", "2", "--block-size", "4",
+              "--slo-ms", "4000",
+              "--tensor-parallel", "2", "--tuning-table", art,
+              "--trace-dir", str(tmp_path)],
+             xla_devices=8)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "tensor-parallel decode: p=2 via tuned all_gather" in r.stdout
+    # the decode plan resolves through the KB-scale end of the grid
+    assert "decode plan p=2" in r.stdout
+    assert "served 6 requests" in r.stdout
+    assert "SLO p99 <=" in r.stdout
+    doc = _json.loads((tmp_path / "decode_summary.json").read_text())
+    assert doc["mode"] == "continuous" and doc["tensor_parallel"] == 2
+    assert doc["slo_ms"] == 4000.0
+    assert len(doc["requests"]) == 6
+
+
 def test_train_cli_probe_fabric_selects_profile_2dev(tmp_path):
     """--probe-fabric times the live fabric and selects the matching table
     out of a multi-backend schema-3 artifact, instead of first-table-wins
