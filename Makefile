@@ -37,8 +37,8 @@ bench:
 bench-smoke:
 	BENCH_SMOKE=1 PYTHONPATH=src:. $(PY) benchmarks/run.py \
 		--only hierarchy_vs_flat tuner_budget gradsync_pipeline serving \
-		--gate
+		collective_synthesis --gate
 
 bench-snapshot:
 	BENCH_SMOKE=1 PYTHONPATH=src:. $(PY) benchmarks/run.py \
-		--only gradsync_pipeline serving --json
+		--only gradsync_pipeline serving collective_synthesis --json

@@ -1,0 +1,73 @@
+"""Synthesized schedules vs the hand-written menu vs the XLA default,
+priced on the analytical model (survey §6).
+
+For each (op, nbytes, p) the synthesizer's pareto front is compared
+against every hand-written candidate and against the modeled XLA
+choice.  All times are modeled microseconds on ``DEFAULT_HOCKNEY`` —
+deterministic ratios, so the ``speedup=`` columns gate cleanly against
+the committed ``BENCH_synth_smoke.json`` snapshot.
+
+The suite *asserts* the front's claims: a synthesized schedule never
+loses to any *unsegmented* hand-written candidate at these
+power-of-two fan-outs (the families subsume recursive_doubling /
+rabenseifner / ring-without-pipelining as special cases on this
+model; only segmented ring's pipelining credit can pull ahead, at
+bandwidth-bound sizes), and at the artifact's advertised win point
+(all_reduce, p=4, 256 KiB) it beats the FULL menu, segments included.
+"""
+from repro.core.analytical import DEFAULT_HOCKNEY, collective_cost
+from repro.core.collectives import synth
+from repro.core.tuning.space import methods_for
+
+from benchmarks.common import row
+
+JSON_NAME = "synth_smoke"
+
+OPS = ("all_reduce", "reduce_scatter", "all_gather")
+PS = (4, 8, 16)
+MS = (8192, 262144, 1 << 22, 1 << 26)
+
+#: points where the front claims a strict win over every hand-written
+#: candidate — the shipped tuned artifact advertises the first one
+WIN_CLAIMS = (("all_reduce", 4, 262144),)
+
+
+def run():
+    synth.clear_registry()
+    synth.synthesize_all(OPS, PS)
+    try:
+        for op in OPS:
+            for p in PS:
+                front = synth.registered(op, p)
+                assert front, (op, p)
+                for m in MS:
+                    hand = {
+                        me.algorithm: collective_cost(
+                            op, me.algorithm, DEFAULT_HOCKNEY, p, m,
+                            segments=me.segments)
+                        for me in methods_for(op, include_xla=False)}
+                    best_hand = min(hand, key=hand.get)
+                    unseg = {me.algorithm: collective_cost(
+                        op, me.algorithm, DEFAULT_HOCKNEY, p, m)
+                        for me in methods_for(op, include_xla=False)
+                        if me.segments == 1}
+                    syn = {name: collective_cost(
+                        op, f"synth:{name}", DEFAULT_HOCKNEY, p, m)
+                        for name in front}
+                    best_syn = min(syn, key=syn.get)
+                    xla = collective_cost(op, "xla", DEFAULT_HOCKNEY, p, m)
+                    speedup = hand[best_hand] / syn[best_syn]
+                    assert syn[best_syn] <= min(unseg.values()) * (1 + 1e-9), (
+                        f"synthesized front lost to an unsegmented "
+                        f"hand-written schedule at ({op}, p={p}, m={m})")
+                    if (op, p, m) in WIN_CLAIMS:
+                        assert syn[best_syn] < hand[best_hand], (
+                            f"front claims a win at ({op}, p={p}, m={m}) "
+                            f"but {best_hand} matched it")
+                    prog = synth.get_program(op, best_syn, p)
+                    row(f"synth/{op}/p{p}/m{m}", syn[best_syn] * 1e6,
+                        f"speedup={speedup:.2f}x;prog={best_syn}"
+                        f"(steps={prog.n_steps});hand={best_hand};"
+                        f"xla_penalty={xla / syn[best_syn]:.2f}x")
+    finally:
+        synth.clear_registry()

@@ -15,6 +15,7 @@ import traceback
 from benchmarks import (
     analytical_models,
     collective_algorithms,
+    collective_synthesis,
     common,
     decision_tree_pruning,
     gradsync_pipeline,
@@ -32,6 +33,7 @@ from benchmarks import (
 
 SUITES = {
     "collective_algorithms": collective_algorithms,   # Table 2
+    "collective_synthesis": collective_synthesis,     # §6 synthesized schedules
     "analytical_models": analytical_models,           # Table 3
     "method_comparison": method_comparison,           # Table 4
     "quadtree_encoding": quadtree_encoding,           # §3.3

@@ -42,7 +42,19 @@ if __name__ == "__main__":
     sim = NetworkSimulator(NetworkProfile(seed=0))
     session = TuningSession(SimulatorBackend(sim), trials=3)
 
-    print("== fit all tuner families over one shared measurement cache ==")
+    # synthesize + verify pareto-front step programs for every grid
+    # fan-out (and the 2-rank topology tiers below) BEFORE tuning, so
+    # every tuner ranks `synth:` schedules against the hand-written
+    # menu on equal footing; winners are stamped into the artifact's
+    # `programs` field and rebuilt at load
+    from repro.core.collectives import synth
+    fronts = synth.synthesize_all(OPS, (2,) + PS)
+    print("== synthesized schedule fronts (op, p -> programs) ==")
+    for (op, p), names in sorted(fronts.items()):
+        if names:
+            print(f"  {op:14s} p={p:<4d} {', '.join(names)}")
+
+    print("\n== fit all tuner families over one shared measurement cache ==")
     reports = session.fit_all([make_tuner(n, OPS, PS, MS)
                                for n in TUNER_NAMES])
     print(f"{'tuner':14s} {'new exps':>9s} {'cache hits':>11s} "

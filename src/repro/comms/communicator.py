@@ -210,6 +210,20 @@ def _meta_schedule(policy) -> Optional[dict]:
     return None
 
 
+def _meta_programs(policy) -> List[dict]:
+    """Serialized synthesized programs the artifact carries (all levels
+    of a hierarchical artifact), [] for pre-synthesis artifacts."""
+    out: List[dict] = []
+    if policy.kind == "table":
+        meta = policy.table.meta
+        out.extend(meta.programs or () if meta else ())
+    elif policy.kind == "hier":
+        for _, table in policy.hier.levels:
+            if table.meta is not None and table.meta.programs:
+                out.extend(table.meta.programs)
+    return out
+
+
 class _HierPolicy:
     """A `HierarchicalDecision`: one table per topology level. A flat
     request answers from the level that carries its mesh axis (a 3-level
@@ -439,6 +453,12 @@ class Communicator:
             sched = _meta_schedule(policy)
             bucket_bytes = int(sched.get("bucket_bytes", 0)) if sched \
                 else 0
+        carried = _meta_programs(policy)
+        if carried:
+            # rebuild the artifact's synthesized programs so its
+            # synth:<name> rows dispatch (each re-passes the verifier)
+            from repro.core.collectives import synth
+            synth.adopt_programs(carried)
         if trace is True:
             trace = obs_trace.TraceRecorder()
         return cls(mesh, policy=policy, topology=topology, probed=probed,

@@ -46,10 +46,28 @@ class PlanEntry:
             pipe += f" release={self.release} stream={self.stream}"
         meas = f" measured={self.measured_us:.1f}us" \
             if self.measured_us is not None else ""
+        synth = ""
+        if self.spec.algorithm.startswith("synth:"):
+            synth = self._synth_steps()
         return (f"{self.request.op:14s} {self.request.nbytes:>10d} B "
                 f"p={self.request.axis_size:<4d}-> "
-                f"{self.spec.algorithm} segments={self.spec.segments}"
+                f"{self.spec.algorithm}{synth} segments={self.spec.segments}"
                 f"{lvl}{pipe}{meas} [{self.source}]")
+
+    def _synth_steps(self) -> str:
+        """Step count of the synthesized program this entry dispatches —
+        the same materialization the executing op performs, so when a
+        nearest-on-grid decision falls back to the any-p family at this
+        fan-out, the rendered program names the fallback."""
+        from repro.core.collectives import synth as _synth
+        name = self.spec.algorithm[len("synth:"):]
+        try:
+            prog = _synth._dispatch_program(
+                self.request.op, name, self.request.axis_size)
+        except Exception:                   # invalid at this fan-out
+            return " (steps=?)"
+        via = "" if prog.name == name else f" via {prog.name}"
+        return f" (steps={prog.n_steps}{via})"
 
 
 @dataclasses.dataclass

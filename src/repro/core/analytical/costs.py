@@ -32,6 +32,13 @@ def collective_cost(
     gamma: float = VPU_GAMMA,
 ) -> float:
     """Predicted wall time of one collective invocation."""
+    if algorithm.startswith("synth:"):
+        # synthesized step program: alpha-beta-gamma over its exact
+        # per-step wire/combine chunks (lazy import: synth prices
+        # itself back through this module)
+        from repro.core.collectives import synth
+        return synth.program_cost(op, algorithm[len("synth:"):], model,
+                                  p, m, gamma=gamma)
     t = model.p2p
     lg = _log2(p)
     ns = max(1, segments)

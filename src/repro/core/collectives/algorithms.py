@@ -245,6 +245,11 @@ def allgather_ring(x, axis, axis_size, *, segments=1):
 def allgather_recursive_doubling(x, axis, axis_size, *, segments=1):
     del segments
     p = axis_size
+    if p & (p - 1):
+        # XOR partnering (i ^ d) only pairs ranks when p is a power of
+        # two; at other fan-outs run the dissemination schedule, which
+        # has the same ceil(log2 p) round count and wire bytes.
+        return allgather_bruck(x, axis, axis_size)
     r = jax.lax.axis_index(axis)
     k = _log2(p)
     m = x.reshape(-1).size
@@ -287,14 +292,20 @@ def allgather_bruck(x, axis, axis_size, *, segments=1):
     del segments
     p = axis_size
     r = jax.lax.axis_index(axis)
-    k = _log2(p)
     m = x.reshape(-1).size
     buf = x.reshape(1, m)
-    for s in range(k):
-        d = 1 << s
+    # generalized (dissemination) Bruck: at distance d each rank holds
+    # blocks [r, r+d) and forwards the first min(d, p-d) of them, so the
+    # held run grows to exactly p with no duplicate blocks at ANY p.
+    # For p a power of two this sends the whole buffer every round —
+    # identical to the classic doubling schedule.
+    d = 1
+    while d < p:
+        nb = min(d, p - d)
         perm = [(i, (i - d) % p) for i in range(p)]   # send to rank-d
-        recv = jax.lax.ppermute(buf, axis, perm)      # receive from rank+d
+        recv = jax.lax.ppermute(buf[:nb], axis, perm)  # receive from rank+d
         buf = jnp.concatenate([buf, recv], axis=0)
+        d += nb
     # rank r holds blocks [r, r+1, ..., r+p-1] (mod p); rotate into order
     buf = jnp.roll(buf, shift=r, axis=0)
     return buf.reshape((p * x.shape[0],) + x.shape[1:]) if x.ndim > 1 \
@@ -585,6 +596,11 @@ ALGORITHMS: Dict[str, Dict[str, Callable]] = {
 
 
 def get(op: str, algorithm: str) -> Callable:
+    if algorithm.startswith("synth:"):
+        # synthesized step programs (synth.py) dispatch by family name;
+        # the runner materializes + verifies at the call-time axis_size
+        from repro.core.collectives import synth
+        return synth.runner(op, algorithm[len("synth:"):])
     try:
         return ALGORITHMS[op][algorithm]
     except KeyError:

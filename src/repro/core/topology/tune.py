@@ -138,7 +138,7 @@ def optimal_hierarchical_allreduce_time(topology: Topology, m: int) -> float:
     total = 0.0
     for lv, op, nbytes in _phases(topology, m):
         _, t = sims[lv.name].optimal(op, lv.size, nbytes,
-                                     methods_for(op, include_xla=False))
+                                     methods_for(op, include_xla=False, p=lv.size))
         total += t
     return total
 
@@ -287,7 +287,8 @@ def optimal_machine_allreduce_time(topology: Topology, m: int) -> float:
     """The oracle both strategies are penalized against: the better of the
     best flat schedule and the best hierarchical composition."""
     best_flat = min(flat_time(topology, "all_reduce", meth, m)
-                    for meth in methods_for("all_reduce", include_xla=False))
+                    for meth in methods_for("all_reduce", include_xla=False,
+                                            p=topology.total_size))
     if len(topology.levels) == 1:
         return best_flat
     return min(best_flat, optimal_hierarchical_allreduce_time(topology, m))

@@ -108,7 +108,7 @@ class ANNSelector:
 
     def decide(self, op: str, p: int, m: int) -> Method:
         best, bt = None, float("inf")
-        for meth in methods_for(op, include_xla=False):
+        for meth in methods_for(op, include_xla=False, p=p):
             if (op, meth.algorithm) not in self.models:
                 continue
             t = self.predict_time(op, meth.algorithm, p, m, meth.segments)

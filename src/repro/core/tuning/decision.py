@@ -36,6 +36,13 @@ class TableMeta:
     Absent (every pre-existing artifact), consumers run the sequential
     per-leaf path, so the on-disk schema stays backward-compatible in
     both directions.
+
+    programs optionally carries the synthesized step programs
+    (``collectives/synth.py`` pareto fronts, serialized via
+    ``Program.to_json``) whose ``synth:<name>`` algorithms the rows may
+    reference, so ``Communicator.create`` can rebuild and dispatch them
+    at load.  Absent, nothing changes — same compatibility contract as
+    ``schedule``.
     """
 
     tuner: str = "unknown"
@@ -47,15 +54,21 @@ class TableMeta:
     backend: str = "simulator"
     profile: Optional[dict] = None
     schedule: Optional[dict] = None
+    programs: Optional[List[dict]] = None
 
     def to_json(self) -> dict:
-        return {
+        d = {
             "tuner": self.tuner, "ops": list(self.ops),
             "ps": list(self.ps), "ms": list(self.ms),
             "n_experiments": self.n_experiments, "penalty": self.penalty,
             "backend": self.backend, "profile": self.profile,
             "schedule": self.schedule,
         }
+        if self.programs is not None:
+            # only stamped when synthesis ran, so program-free artifacts
+            # stay byte-identical to the previous schema generation
+            d["programs"] = self.programs
+        return d
 
     @classmethod
     def from_json(cls, d: dict) -> "TableMeta":
@@ -68,6 +81,7 @@ class TableMeta:
             backend=d.get("backend", "simulator"),
             profile=d.get("profile"),
             schedule=d.get("schedule"),
+            programs=d.get("programs"),
         )
 
 
@@ -159,7 +173,7 @@ def mean_penalty(
     """Survey metric: mean of (t_chosen - t_opt) / t_opt over grid points."""
     total = 0.0
     for pt in points:
-        meths = methods_for(pt.op, include_xla=include_xla)
+        meths = methods_for(pt.op, include_xla=include_xla, p=pt.p)
         _, t_opt = simulator.optimal(pt.op, pt.p, pt.m, meths)
         chosen = decide(pt.op, pt.p, pt.m)
         t = simulator.expected_time(pt.op, chosen.algorithm, pt.p, pt.m,

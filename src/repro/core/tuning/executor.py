@@ -147,7 +147,7 @@ class BenchmarkExecutor:
 
     def run_point(self, ds: Dataset, pt: Point,
                   methods: Optional[Sequence[Method]] = None):
-        for meth in (methods or methods_for(pt.op, include_xla=False)):
+        for meth in (methods or methods_for(pt.op, include_xla=False, p=pt.p)):
             for t in self.backend.measure(pt.op, pt.p, pt.m, meth,
                                           trials=self.trials):
                 ds.add(Measurement(pt.op, pt.p, pt.m, meth.algorithm,

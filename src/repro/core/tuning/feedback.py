@@ -110,7 +110,7 @@ class FeedbackController:
         rule = self._rule_for(op, p, m)
         if self.rng.random() < self.epsilon:
             # exploration probe
-            cands = methods_for(op, include_xla=False)
+            cands = methods_for(op, include_xla=False, p=p)
             meth = cands[self.rng.integers(len(cands))]
             self._last = (op, p, m, meth, True)
             return meth

@@ -49,6 +49,10 @@ def _log2(p: int) -> int:
 def _rounds(op: str, algo: str, p: int, m: float, segments: int
             ) -> List[Tuple[float, float, float]]:
     """[(bytes_on_wire, contention, combine_bytes)] per sequential round."""
+    if algo.startswith("synth:"):
+        # synthesized step program: one round per step, exact chunk counts
+        from repro.core.collectives import synth
+        return synth.rounds_for(op, algo[len("synth:"):], p, m)
     lg = _log2(p)
     ns = max(1, segments)
     R: List[Tuple[float, float, float]] = []

@@ -5,7 +5,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 from repro.core.collectives.algorithms import ALGORITHMS
 
@@ -58,13 +58,27 @@ class Method:
     segments: int = 1
 
 
-def methods_for(op: str, include_xla: bool = True) -> List[Method]:
+def methods_for(op: str, include_xla: bool = True,
+                p: Optional[int] = None) -> List[Method]:
+    """Candidate (algorithm, segments) tuples for one op.
+
+    When the concrete fan-out ``p`` is given, the pareto-front
+    programs registered by the synthesizer (``collectives/synth.py``)
+    at (op, p) join the menu as ``synth:<name>`` candidates, so every
+    tuner ranks hand-written and synthesized schedules on equal
+    footing.  With no registrations (the default state) the menu is
+    unchanged.
+    """
     out = []
     for a in TUNABLE[op]:
         if not include_xla and a == "xla":
             continue
         segs = SEGMENT_CANDIDATES if (op, a) in SEGMENTED else (1,)
         out.extend(Method(a, s) for s in segs)
+    if p is not None:
+        from repro.core.collectives import synth
+        out.extend(Method(f"synth:{name}", 1)
+                   for name in synth.registered(op, p))
     return out
 
 

@@ -56,7 +56,7 @@ class StarTuner:
     def _ctx(self, op: str, p: int, m: int) -> _Ctx:
         key = (op, p, _bucket(m))
         if key not in self.ctxs:
-            cands = methods_for(op, include_xla=False)
+            cands = methods_for(op, include_xla=False, p=p)
             if self.group:
                 # algorithm grouping: keep the model-predicted top-k methods
                 cands = sorted(

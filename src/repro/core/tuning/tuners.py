@@ -55,8 +55,12 @@ def _profile_meta(session: TuningSession) -> tuple:
 
 def _meta(name: str, session: TuningSession, ops, ps, ms) -> TableMeta:
     backend, profile = _profile_meta(session)
+    from repro.core.collectives import synth
     return TableMeta(tuner=name, ops=tuple(ops), ps=tuple(ps), ms=tuple(ms),
-                     backend=backend, profile=profile)
+                     backend=backend, profile=profile,
+                     # synthesized candidates the rows may reference ride
+                     # along in the artifact (None when none registered)
+                     programs=synth.programs_to_json(ops, ps))
 
 
 def _densify(decide: Callable[[str, int, int], Method],
@@ -204,7 +208,7 @@ class EnsembleTuner(_GridTuner):
 
         def decide(op, p, m):
             best, bt = Method("xla", 1), float("inf")
-            for meth in methods_for(op, include_xla=False):
+            for meth in methods_for(op, include_xla=False, p=p):
                 mdl = models.get((op, meth.algorithm))
                 if mdl is None:
                     continue

@@ -182,7 +182,7 @@ class UMTAC:
 
     def _argmin(self, models, op, p, m) -> Method:
         best, bt = Method("xla", 1), float("inf")
-        for meth in methods_for(op, include_xla=False):
+        for meth in methods_for(op, include_xla=False, p=p):
             t = self._predict(models, op, meth, p, m)
             if t < bt:
                 best, bt = meth, t

@@ -1,0 +1,70 @@
+"""Pure-numpy mirror of the step-program interpreter (program.py).
+
+Executes a synthesized ``Program`` over explicit per-rank buffers with
+the same step semantics and the same combine order as the shard_map
+interpreter (receiver computes ``own + incoming``), so f32 results are
+bit-comparable against the JAX execution and the dense oracle without
+any devices.  Used by the hypothesis properties (test_synthesis.py) and
+the 8-device oracle harness (validate_synthesis.py).
+"""
+import numpy as np
+
+
+def dense_oracle(op, xs):
+    """What the collective must produce, computed densely.
+
+    xs: (p, n) per-rank local inputs.  Returns per-rank outputs stacked
+    on axis 0, padded exactly like the interpreter pads.
+    """
+    xs = np.asarray(xs)
+    p, n = xs.shape
+    if op == "all_reduce":
+        return np.broadcast_to(xs.sum(0, keepdims=True), (p, n)).copy()
+    if op == "reduce_scatter":
+        pad = (-n) % p
+        full = np.pad(xs.sum(0), (0, pad)).reshape(p, -1)
+        return full.copy()                      # row r = rank r's shard
+    if op == "all_gather":
+        return np.broadcast_to(xs.reshape(1, p * n), (p, p * n)).copy()
+    raise KeyError(op)
+
+
+def run_program(prog, xs):
+    """Execute ``prog`` on per-rank inputs ``xs`` of shape (p, n).
+
+    Returns the per-rank outputs stacked on axis 0, in the interpreter's
+    output convention (all_reduce: (p, n); reduce_scatter: (p, padded/p);
+    all_gather: (p, p*n)).
+    """
+    xs = np.asarray(xs)
+    p = prog.p
+    assert xs.shape[0] == p, (xs.shape, p)
+    n = xs.shape[1]
+    if prog.op in ("all_reduce", "reduce_scatter"):
+        pad = (-n) % p
+        bufs = [np.pad(xs[r], (0, pad)).reshape(p, -1).copy()
+                for r in range(p)]
+    else:
+        bufs = [np.zeros((p, n), xs.dtype) for _ in range(p)]
+        for r in range(p):
+            bufs[r][r] = xs[r]
+
+    for st in prog.steps:
+        d = st.shift % p
+        offs = [o % p for o in st.offsets]
+        new = [b.copy() for b in bufs]
+        for r in range(p):                      # r = receiver
+            s = (r - d) % p                     # its sender
+            rows = [(s + o) % p for o in offs]  # global chunk indices
+            payload = bufs[s][rows]
+            if st.reduce:
+                new[r][rows] = new[r][rows] + payload
+            else:
+                new[r][rows] = payload
+        bufs = new
+
+    if prog.op == "all_reduce":
+        return np.stack([b.reshape(-1)[:n] for b in bufs])
+    if prog.op == "reduce_scatter":
+        return np.stack([bufs[r][r] for r in range(p)])
+    return np.stack([b.reshape(-1) for b in bufs])

@@ -27,6 +27,14 @@ def per_rank(fn, xs, out_specs=P("x")):
         fn, mesh=mesh, in_specs=P("x"), out_specs=out_specs,
         check_vma=False))(xs)
 
+# VALIDATE_ONLY="op:algo,op:algo" scopes the sweep (e.g. the non-power-of-two
+# device counts, where only the dissemination-capable algorithms apply)
+_only = os.environ.get("VALIDATE_ONLY", "")
+ONLY = {tuple(t.split(":", 1)) for t in _only.split(",") if t} or None
+
+def selected(op, name):
+    return ONLY is None or (op, name) in ONLY
+
 fails = []
 def check(name, got, want, tol=2e-5):
     err = float(jnp.max(jnp.abs(got.astype(jnp.float32) - want.astype(jnp.float32))))
@@ -45,6 +53,8 @@ for dtype in (jnp.float32, jnp.bfloat16):
         # ---- all_reduce: every rank contributes row r ----
         want = jnp.broadcast_to(xs.astype(jnp.float32).sum(0, keepdims=True), (p, n))
         for name in alg.ALGORITHMS["all_reduce"]:
+            if not selected("all_reduce", name):
+                continue
             for segs in ((1, 2) if name == "ring" else (1,)):
                 f = lambda xr, _name=name, _s=segs: alg.get("all_reduce", _name)(
                     xr[0], "x", p, op="add", segments=_s)[None]
@@ -54,6 +64,8 @@ for dtype in (jnp.float32, jnp.bfloat16):
         pad = (-n) % p
         fullsum = jnp.pad(xs.astype(jnp.float32).sum(0), (0, pad)).reshape(p, -1)
         for name in alg.ALGORITHMS["reduce_scatter"]:
+            if not selected("reduce_scatter", name):
+                continue
             f = lambda xr, _name=name: alg.get("reduce_scatter", _name)(
                 xr[0], "x", p, op="add")[None]
             got = per_rank(f, xs)   # (p, n/p): row r = rank r's shard
@@ -61,6 +73,8 @@ for dtype in (jnp.float32, jnp.bfloat16):
         # ---- all_gather ----
         want_ag = jnp.broadcast_to(xs.reshape(1, p * n), (p, p * n))
         for name in alg.ALGORITHMS["all_gather"]:
+            if not selected("all_gather", name):
+                continue
             f = lambda xr, _name=name: alg.get("all_gather", _name)(
                 xr[0], "x", p)[None]
             got = per_rank(f, xs)
@@ -68,6 +82,8 @@ for dtype in (jnp.float32, jnp.bfloat16):
         # ---- broadcast ----
         want_bc = jnp.broadcast_to(xs[0:1].astype(jnp.float32), (p, n))
         for name in alg.ALGORITHMS["broadcast"]:
+            if not selected("broadcast", name):
+                continue
             for segs in ((1, 4) if name == "chain" else (1,)):
                 f = lambda xr, _name=name, _s=segs: alg.get("broadcast", _name)(
                     xr[0], "x", p, segments=_s)[None]
@@ -78,12 +94,16 @@ for dtype in (jnp.float32, jnp.bfloat16):
             xs3 = jnp.asarray(rng.normal(size=(p, p, n // p)), dtype)
             want_a2a = jnp.swapaxes(xs3, 0, 1)   # out[r, j] = in[j, r]
             for name in alg.ALGORITHMS["all_to_all"]:
+                if not selected("all_to_all", name):
+                    continue
                 f = lambda xr, _name=name: alg.get("all_to_all", _name)(
                     xr[0], "x", p)[None]
                 got = per_rank(f, xs3.reshape(p, p * (n // p)))
                 check(f"all_to_all/{name}/{n}/{dtype.__name__}", got.reshape(p, p, n // p),
                       want_a2a, tol)
     # ---- reduce (valid at root only) ----
+    if not selected("reduce", "binomial"):
+        continue
     xs = jnp.asarray(rng.normal(size=(p, 128)), dtype)
     f = lambda xr: alg.reduce_binomial(xr[0], "x", p, op="add")[None]
     got = per_rank(f, xs)
@@ -92,6 +112,8 @@ for dtype in (jnp.float32, jnp.bfloat16):
 
 # barrier completes
 for name in alg.ALGORITHMS["barrier"]:
+    if not selected("barrier", name):
+        continue
     f = lambda xr, _name=name: alg.get("barrier", _name)("x", p)[None]
     got = per_rank(f, jnp.zeros((p, 1)))
     print("OK  barrier/" + name, "val=", got[0, 0])

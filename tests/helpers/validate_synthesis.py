@@ -1,0 +1,317 @@
+"""Oracle validation of synthesized step programs on 8 simulated devices.
+
+Every program the synthesizer registers must be bit-identical (within
+reduction-order tolerance) to the psum / psum_scatter / all_gather
+oracle — flat at p=8, and inside the 2-level (2x4) and 3-level (2x2x2)
+hierarchical compositions through the Communicator.  Also asserts:
+
+  * the numpy mirror (synth_mirror.py) == the JAX execution,
+  * segments invariance (programs are unsegmented; the dispatch kwarg
+    is accepted and ignored),
+  * explain() == executed specs via a recording Communicator subclass,
+    with ``synth:<name>`` entries rendering their step counts,
+  * Communicator.create on a program-carrying artifact rebuilds the
+    programs (registry cleared first, so dispatch can only come from
+    the artifact),
+  * invalid programs (non-covering sends, double-counting reduces,
+    wrong final layout) are rejected with actionable errors.
+
+Run as a subprocess (sets device count before importing jax). Prints
+OK/FAIL lines and a final ``FAILS: n``; exit 1 on any FAIL.
+"""
+import os, sys
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+import numpy as np
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+from repro import compat
+from repro.comms import Communicator
+from repro.core.collectives import synth
+from repro.core.collectives.program import (
+    Program, ProgramError, Step, make_runner)
+from repro.core.topology.decision import HierarchicalDecision
+from repro.core.tuning.decision import DecisionTable, TableMeta
+from repro.core.tuning.space import Method
+import synth_mirror as sm
+
+P_DEV = jax.device_count()
+assert P_DEV == 8, f"harness expects 8 simulated devices, got {P_DEV}"
+
+fails = []
+
+
+def check(name, ok, extra=""):
+    print(("OK  " if ok else "FAIL"), name, extra)
+    if not ok:
+        fails.append(name)
+
+
+def check_close(name, got, want, tol=2e-5):
+    err = float(jnp.max(jnp.abs(jnp.asarray(got, jnp.float32)
+                                - jnp.asarray(want, jnp.float32))))
+    check(name, err <= tol, "err=%.3g" % err)
+
+
+rng = np.random.default_rng(0)
+
+# register the fronts every section below dispatches from
+for op in ("all_reduce", "reduce_scatter", "all_gather"):
+    for p in (2, 4, 8):
+        synth.synthesize_front(op, p)
+
+# ---------------------------------------------------------------------------
+# 1) flat: every registered program at p=8 vs the XLA oracle, f32 + bf16,
+#    plus mirror == JAX (f32) and segments invariance
+# ---------------------------------------------------------------------------
+mesh = compat.make_mesh((P_DEV,), ("x",))
+
+
+def per_rank(fn, xs, out_specs=P("x")):
+    return jax.jit(compat.shard_map(
+        fn, mesh=mesh, in_specs=P("x"), out_specs=out_specs,
+        check_vma=False))(xs)
+
+
+ORACLE = {
+    "all_reduce": lambda x: jax.lax.psum(x, "x"),
+    "reduce_scatter": lambda x: jax.lax.psum_scatter(
+        x.reshape(P_DEV, -1), "x", scatter_dimension=0, tiled=False),
+    "all_gather": lambda x: jax.lax.all_gather(x, "x", axis=0, tiled=True),
+}
+
+for op in ("all_reduce", "reduce_scatter", "all_gather"):
+    for name in sorted(synth.families(op, P_DEV)):
+        prog = synth.get_program(op, name, P_DEV)
+        runner = synth.runner(op, name)
+        for dtype in (jnp.float32, jnp.bfloat16):
+            tol = 2e-5 if dtype == jnp.float32 else 0.11
+            for n in (64, 1000, 4096):
+                xs = jnp.asarray(rng.normal(size=(P_DEV, n)), dtype)
+                if op == "all_gather":
+                    f = lambda xr: runner(xr[0], "x", P_DEV)[None]
+                else:
+                    f = lambda xr: runner(xr[0], "x", P_DEV, op="add")[None]
+                got = per_rank(f, xs)
+                want = per_rank(lambda xr: ORACLE[op](xr[0])[None], xs)
+                check_close(f"flat/{op}/synth:{name}/{n}/{dtype.__name__}",
+                            got, want, tol)
+        # mirror == JAX execution (f32, same combine order -> tiny tol)
+        xs = jnp.asarray(rng.normal(size=(P_DEV, 100)), jnp.float32)
+        if op == "all_gather":
+            got = per_rank(lambda xr: runner(xr[0], "x", P_DEV)[None], xs)
+        else:
+            got = per_rank(
+                lambda xr: runner(xr[0], "x", P_DEV, op="add")[None], xs)
+        mir = sm.run_program(prog, np.asarray(xs, np.float32))
+        if op == "reduce_scatter":
+            got = jnp.asarray(got).reshape(P_DEV, -1)
+        check_close(f"mirror_eq_jax/{op}/synth:{name}", got, mir, tol=1e-6)
+        # segments ignored: identical result for segments=1 and 4
+        if op != "all_gather":
+            g1 = per_rank(lambda xr: runner(
+                xr[0], "x", P_DEV, op="add", segments=1)[None], xs)
+            g4 = per_rank(lambda xr: runner(
+                xr[0], "x", P_DEV, op="add", segments=4)[None], xs)
+            check(f"segments_invariant/{op}/synth:{name}",
+                  bool(jnp.array_equal(jnp.asarray(g1), jnp.asarray(g4))))
+
+# ---------------------------------------------------------------------------
+# 2) hierarchical compositions: synth programs at every level
+# ---------------------------------------------------------------------------
+OUTER, INNER = 2, 4
+mesh2 = compat.make_mesh((OUTER, INNER), ("pod", "data"))
+
+hier2 = HierarchicalDecision([
+    ("intra_pod", DecisionTable({
+        ("reduce_scatter", INNER, 1024): Method("synth:dissem", 1),
+        ("all_gather", INNER, 1024): Method("synth:dissem", 1),
+        ("all_reduce", INNER, 1024): Method("synth:hybrid1", 1),
+    })),
+    ("cross_pod", DecisionTable({
+        ("all_reduce", OUTER, 1024): Method("synth:dissem", 1),
+        ("reduce_scatter", OUTER, 1024): Method("synth:dissem", 1),
+        ("all_gather", OUTER, 1024): Method("synth:dissem", 1),
+    })),
+])
+comm2 = Communicator.create(mesh2, artifact=hier2)
+
+
+def per_rank2(fn, xs):
+    def wrapped(x):
+        return fn(x[0, 0])[None, None]
+    return jax.jit(compat.shard_map(
+        wrapped, mesh=mesh2, in_specs=P("pod", "data"),
+        out_specs=P("pod", "data"), check_vma=False))(xs)
+
+
+for m in (64, 1000):
+    xs2 = jnp.asarray(rng.normal(size=(OUTER, INNER, m)), jnp.float32)
+    want = jnp.broadcast_to(xs2.sum((0, 1))[None, None],
+                            (OUTER, INNER, m))
+    got = per_rank2(lambda x: comm2.all_reduce(x, ("data", "pod")), xs2)
+    check_close(f"hier2_all_reduce/synth/{m}", got, want, tol=2e-4)
+
+mesh3 = compat.make_mesh((2, 2, 2), ("dcn", "pod", "data"))
+hier3 = HierarchicalDecision([
+    (lvl, DecisionTable({
+        ("reduce_scatter", 2, 1024): Method("synth:dissem", 1),
+        ("all_gather", 2, 1024): Method("synth:dissem", 1),
+        ("all_reduce", 2, 1024): Method("synth:dissem", 1),
+    })) for lvl in ("intra_host", "intra_pod", "cross_pod")
+])
+comm3 = Communicator.create(mesh3, artifact=hier3)
+
+tree = {"w": jnp.asarray(rng.normal(size=(2, 2, 2, 33, 7)), jnp.float32),
+        "b": jnp.asarray(rng.normal(size=(2, 2, 2, 5)), jnp.float32)}
+want_tree = jax.tree.map(lambda a: a.mean((0, 1, 2)), tree)
+specs3 = jax.tree.map(lambda _: P("dcn", "pod", "data"), tree)
+
+
+def sync3(t):
+    local = jax.tree.map(lambda a: a[0, 0, 0], t)
+    out = comm3.sync_gradients(local, mean=True)
+    return jax.tree.map(lambda a: a[None, None, None], out)
+
+
+got_tree = jax.jit(compat.shard_map(
+    sync3, mesh=mesh3, in_specs=(specs3,), out_specs=specs3,
+    check_vma=False))(tree)
+for k in tree:
+    check_close(f"hier3_sync_gradients/synth/{k}", got_tree[k][0, 0, 0],
+                want_tree[k], tol=3e-5)
+
+# ---------------------------------------------------------------------------
+# 3) explain() == executed (recording probe), synth entries render steps
+# ---------------------------------------------------------------------------
+class RecordingComm(Communicator):
+    def __init__(self, comm):
+        super().__init__(comm.mesh, policy=comm._policy,
+                         topology=comm.topology, probed=comm.probed,
+                         a2a_algorithm=comm._a2a)
+        self.log = []
+
+    def spec(self, req):
+        s = super().spec(req)
+        self.log.append((req.op, req.nbytes, req.axis_size, None,
+                         s.algorithm, s.segments))
+        return s
+
+    def spec_for_level(self, level, op, nbytes, p):
+        s = super().spec_for_level(level, op, nbytes, p)
+        name = self._policy._level_name(level) \
+            if self._policy.kind == "hier" else None
+        self.log.append((op, nbytes, p, name, s.algorithm, s.segments))
+        return s
+
+
+tree2 = {"w": jnp.asarray(rng.normal(size=(OUTER, INNER, 33, 7)),
+                          jnp.float32),
+         "b": jnp.asarray(rng.normal(size=(OUTER, INNER, 5)), jnp.float32)}
+specs2 = jax.tree.map(lambda _: P("pod", "data"), tree2)
+rec = RecordingComm(comm2)
+jax.eval_shape(
+    compat.shard_map(
+        lambda t: jax.tree.map(
+            lambda a: a[None, None],
+            rec.sync_gradients(jax.tree.map(lambda a: a[0, 0], t),
+                               mean=True)),
+        mesh=mesh2, in_specs=(specs2,), out_specs=specs2,
+        check_vma=False),
+    tree2)
+local_tree2 = jax.tree.map(
+    lambda a: jax.ShapeDtypeStruct(a.shape[2:], a.dtype), tree2)
+plan = comm2.explain_gradients(local_tree2)
+planned = [(e.request.op, e.request.nbytes, e.request.axis_size,
+            e.level, e.spec.algorithm, e.spec.segments)
+           for e in plan.entries if e.source != "psum"]
+check("explain_matches_executed/synth", rec.log == planned,
+      f"\n  executed={rec.log}\n  planned ={planned}")
+check("explain_uses_synth",
+      any(a.startswith("synth:") for (_, _, _, _, a, _) in planned))
+rendered = plan.render()
+check("explain_renders_step_counts",
+      "synth:" in rendered and "(steps=" in rendered, rendered)
+
+# ---------------------------------------------------------------------------
+# 4) Communicator.create rebuilds artifact-carried programs: clear the
+#    registry so dispatch can only come from the artifact's `programs`
+# ---------------------------------------------------------------------------
+synth.synthesize_front("all_reduce", INNER)
+carrying = DecisionTable(
+    {("all_reduce", INNER, 1024): Method("synth:hybrid1", 1)},
+    meta=TableMeta(tuner="handmade", ops=("all_reduce",), ps=(INNER,),
+                   ms=(1024,),
+                   programs=synth.programs_to_json(("all_reduce",),
+                                                   (INNER,))))
+check("artifact_carries_programs", bool(carrying.meta.programs))
+synth.clear_registry()
+comm_art = Communicator.create(mesh2, artifact=carrying)
+check("create_adopts_programs",
+      "hybrid1" in synth.registered("all_reduce", INNER))
+xs2 = jnp.asarray(rng.normal(size=(OUTER, INNER, 256)), jnp.float32)
+got = per_rank2(lambda x: comm_art.all_reduce(x, "data"), xs2)
+want = per_rank2(lambda x: jax.lax.psum(x, "data"), xs2)
+check_close("artifact_synth_dispatch", got, want)
+
+# ---------------------------------------------------------------------------
+# 5) invalid programs rejected with actionable errors
+# ---------------------------------------------------------------------------
+def expect_reject(name, prog, *needles):
+    try:
+        synth.register_program(prog)
+    except ProgramError as e:
+        msg = str(e)
+        check(name, all(n in msg for n in needles), msg)
+    else:
+        check(name, False, "program was accepted")
+
+
+# non-covering send: at step 0 of an all_gather, rank r only holds chunk
+# r (offset 0) — sending offset 1 ships a chunk the sender doesn't have
+expect_reject(
+    "reject_non_covering",
+    Program("all_gather", 4,
+            (Step(shift=3, offsets=(1,)),), "bad_cover"),
+    "does not hold", "non-covering", "step 0")
+
+# wrong final layout: one dissemination round leaves ranks holding only
+# 2 of 4 chunks
+expect_reject(
+    "reject_wrong_layout",
+    Program("all_gather", 4,
+            (Step(shift=3, offsets=(0,)),), "bad_layout"),
+    "wrong final layout")
+
+# double-counting reduce: repeating the shift-1 full-buffer reduce
+# merges rank r-1's contribution twice
+expect_reject(
+    "reject_double_count",
+    Program("all_reduce", 4,
+            (Step(shift=1, offsets=(0, 1, 2, 3), reduce=True),
+             Step(shift=1, offsets=(0, 1, 2, 3), reduce=True),
+             Step(shift=2, offsets=(0, 1, 2, 3), reduce=True)),
+            "bad_double"),
+    "double-counts", "step 1")
+
+# structural defects
+expect_reject("reject_self_send",
+              Program("all_reduce", 4, (Step(shift=4, offsets=(0,),
+                                             reduce=True),), "bad_shift"),
+              "self-send")
+expect_reject("reject_empty_steps",
+              Program("all_reduce", 4, (), "bad_empty"), "no steps")
+
+# and the dispatcher names unavailable families actionably
+try:
+    synth.get_program("all_reduce", "hybrid1", 6)
+except KeyError as e:
+    check("reject_family_at_bad_p", "power-of-two" in str(e)
+          and "rsag" in str(e), str(e))
+else:
+    check("reject_family_at_bad_p", False)
+
+print(f"FAILS: {len(fails)}")
+sys.exit(1 if fails else 0)

@@ -36,6 +36,21 @@ def test_all_algorithms_match_oracles_4dev():
     assert r.returncode == 0, f"STDOUT:\n{r.stdout[-4000:]}\nERR:\n{r.stderr[-2000:]}"
 
 
+@pytest.mark.parametrize("p", [3, 5, 6, 7])
+def test_allgather_dissemination_non_power_of_two(p):
+    """bruck / recursive_doubling at awkward fan-outs — the baseline the
+    schedule synthesizer must beat there (VALIDATE_ONLY scopes the sweep
+    to the dissemination-capable algorithms; the rest assert 2^k)."""
+    r = _run(os.path.join(HERE, "helpers", "validate_collectives.py"),
+             {"XLA_FLAGS": f"--xla_force_host_platform_device_count={p}",
+              "VALIDATE_ONLY": "all_gather:bruck,"
+                               "all_gather:recursive_doubling,"
+                               "all_gather:ring"})
+    assert r.returncode == 0, \
+        f"STDOUT:\n{r.stdout[-4000:]}\nERR:\n{r.stderr[-2000:]}"
+    assert "FAILS: 0" in r.stdout
+
+
 def test_hierarchical_composition_matches_global_sum_8dev():
     """reduce-scatter(inner) / all-reduce(outer) / all-gather(inner) over a
     2x4 (pod, data) mesh equals the global sum, for flat, static and
