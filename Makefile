@@ -8,11 +8,13 @@
 #   make test   - the full tier-1 suite (~8 min).
 #   make bench  - every benchmark table (CSV to stdout).
 #   make bench-smoke - hierarchy_vs_flat + tuner_budget + gradsync_pipeline
-#                 + serving in reduced-size mode (BENCH_SMOKE=1): the perf
-#                 assertions (tuned-hier beats tuned-flat; shared cache
-#                 beats cold; bucketed+pipelined sync beats per-leaf;
-#                 continuous batching beats fixed-batch drain with p99
-#                 under SLO) in seconds, for CI. --gate additionally compares fresh
+#                 + serving + mesh_mapping in reduced-size mode
+#                 (BENCH_SMOKE=1): the perf assertions (tuned-hier beats
+#                 tuned-flat; shared cache beats cold; bucketed+pipelined
+#                 sync beats per-leaf; continuous batching beats
+#                 fixed-batch drain with p99 under SLO; the placement
+#                 sweep recovers identity cost from any scramble) in
+#                 seconds, for CI. --gate additionally compares fresh
 #                 speedup= ratios against the committed BENCH_*_smoke
 #                 snapshots and fails on a >15% regression; telemetry
 #                 artifacts (Perfetto trace + residual summary) land in
@@ -37,8 +39,9 @@ bench:
 bench-smoke:
 	BENCH_SMOKE=1 PYTHONPATH=src:. $(PY) benchmarks/run.py \
 		--only hierarchy_vs_flat tuner_budget gradsync_pipeline serving \
-		collective_synthesis --gate
+		collective_synthesis mesh_mapping --gate
 
 bench-snapshot:
 	BENCH_SMOKE=1 PYTHONPATH=src:. $(PY) benchmarks/run.py \
-		--only gradsync_pipeline serving collective_synthesis --json
+		--only gradsync_pipeline serving collective_synthesis \
+		mesh_mapping --json

@@ -1,0 +1,78 @@
+"""Tuned logical→physical mesh mapping vs identity vs worst-case scramble.
+
+The placement claim: which physical tier each logical mesh axis rides is
+a search dimension that dominates per-collective tuning — bytes sent
+over the wrong tier cannot be recovered by any {algorithm, segments}
+choice. Per topology this table prices the full tuned workload (the
+N-level padded gradient sync plus the KB-regime decode collectives,
+through `modeled_phase_cost` on the per-level profiles) under
+
+  * identity  — today's construction order (axis i on tier i),
+  * tuned     — the `sweep_mappings` winner over the symmetry-pruned
+                candidate set,
+  * scramble  — the WORST enumerated candidate (the device order a
+                placement-blind launch could land on),
+
+on a 2-level (pod/DCN) and a 3-level (host/pod/DCN) topology.
+Acceptance: tuned <= identity <= scramble everywhere — the sweep
+recovers identity-ordering cost or better from any scramble.
+
+CSV rows: ``mesh_mapping/<spec>/<layout>, us, ...`` with the gated
+``speedup=<scramble/tuned>x`` ratio on the tuned row.
+"""
+from __future__ import annotations
+
+import os
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks.common import row
+from repro.core.topology import (
+    Topology,
+    identity_mapping,
+    price_mapping,
+    sweep_mappings,
+)
+
+SMOKE = os.environ.get("BENCH_SMOKE") == "1"
+JSON_NAME = "mapping_smoke" if SMOKE else "mapping"
+
+#: outermost-first topology specs: one 2-level, one 3-level
+SPECS = ("2x4", "2x2x2") if SMOKE else ("4x8", "2x4x4")
+
+
+def sweep(spec: str):
+    topo = Topology.from_spec(spec)
+    axes = tuple(lv.axis for lv in reversed(topo.levels))
+    shape = tuple(lv.size for lv in reversed(topo.levels))
+    best, cands = sweep_mappings(topo, axes, shape)
+    ident = price_mapping(topo, identity_mapping(axes, shape, topo))
+    worst = max(cands, key=lambda c: c.cost)
+    assert best.cost <= ident <= worst.cost, (
+        f"{spec}: tuned {best.cost:.03} / identity {ident:.03} / "
+        f"scramble {worst.cost:.03} out of order")
+    row(f"mesh_mapping/{spec}/identity", ident * 1e6,
+        f"candidates={len(cands)}")
+    row(f"mesh_mapping/{spec}/tuned", best.cost * 1e6,
+        f"speedup={worst.cost / best.cost:.2f}x; "
+        f"vs-identity={ident / best.cost:.2f}x")
+    row(f"mesh_mapping/{spec}/scramble", worst.cost * 1e6,
+        f"tiers={','.join(f'{a}:{t}' for a, t in sorted((worst.tiers or {}).items()))}")
+    return best.cost, ident, worst.cost
+
+
+def run():
+    for spec in SPECS:
+        tuned, ident, scramble = sweep(spec)
+        # the sweep must fully recover the scrambled launch: its winner
+        # is never worse than identity ordering
+        assert tuned <= ident
+        assert scramble / tuned >= 1.0
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

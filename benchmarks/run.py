@@ -21,6 +21,7 @@ from benchmarks import (
     gradsync_pipeline,
     hierarchy_vs_flat,
     kernel_bench,
+    mesh_mapping,
     method_comparison,
     overlap,
     quadtree_encoding,
@@ -42,6 +43,7 @@ SUITES = {
     "star_adaptation": star_adaptation,               # §3.2.3
     "tuner_budget": tuner_budget,                     # unified pipeline cost
     "hierarchy_vs_flat": hierarchy_vs_flat,           # topology-aware tuning
+    "mesh_mapping": mesh_mapping,                     # placement dimension
     "overlap": overlap,                               # §4.1
     "gradsync_pipeline": gradsync_pipeline,           # §4.1 bucketed sync
     "kernel_bench": kernel_bench,                     # kernels layer

@@ -224,6 +224,21 @@ def _meta_programs(policy) -> List[dict]:
     return out
 
 
+def _meta_mapping(policy) -> Optional[dict]:
+    """The swept logical→physical mesh mapping an artifact carries
+    (innermost table wins for hierarchical artifacts — the sweep stamps
+    every level identically), or None — pre-placement artifacts leave
+    the mesh in default device order."""
+    if policy.kind == "table":
+        meta = policy.table.meta
+        return meta.mapping if meta else None
+    if policy.kind == "hier":
+        for _, table in policy.hier.levels:
+            if table.meta is not None and table.meta.mapping:
+                return table.meta.mapping
+    return None
+
+
 class _HierPolicy:
     """A `HierarchicalDecision`: one table per topology level. A flat
     request answers from the level that carries its mesh axis (a 3-level
@@ -321,9 +336,12 @@ class Communicator:
                  probed=None, probed_topology=None,
                  a2a_algorithm: str = "xla",
                  artifact_path: Optional[str] = None,
-                 bucket_bytes: int = 0, trace=None):
+                 bucket_bytes: int = 0, trace=None, mapping=None):
         self.mesh = mesh
         self.topology = topology
+        #: the `MeshMapping` the mesh was (re)built with, or None when it
+        #: stands in default device order (mapping-free artifacts)
+        self.mapping = mapping
         #: optional `repro.obs.TraceRecorder` — installed around every
         #: dispatch root so traced launches need no explicit scoping
         self.trace = trace
@@ -459,12 +477,37 @@ class Communicator:
             # synth:<name> rows dispatch (each re-passes the verifier)
             from repro.core.collectives import synth
             synth.adopt_programs(carried)
+        mapping = None
+        mapdoc = _meta_mapping(policy)
+        if mapdoc:
+            # rebuild the exact mesh the placement sweep priced: same
+            # axes, same shape, the tuned device order
+            from repro.core.topology.placement import MeshMapping
+            mapping = MeshMapping.from_json(mapdoc)
+            if mesh is not None:
+                if tuple(mesh.axis_names) != mapping.axes:
+                    # a different logical mesh (e.g. serve.py's pure-TP
+                    # ("model",) mesh loading a train-tuned artifact):
+                    # the mapping doesn't apply — keep the launch alive
+                    import warnings
+                    warnings.warn(
+                        f"artifact's mesh mapping targets axes "
+                        f"{mapping.axes} but this launch built "
+                        f"{tuple(mesh.axis_names)}; leaving the mesh "
+                        "in default device order", RuntimeWarning,
+                        stacklevel=2)
+                    mapping = None
+                else:
+                    # same axes but a different machine size is a real
+                    # misconfiguration — apply() raises naming both
+                    mesh = mapping.apply(mesh)
         if trace is True:
             trace = obs_trace.TraceRecorder()
         return cls(mesh, policy=policy, topology=topology, probed=probed,
                    probed_topology=probed_topology,
                    a2a_algorithm=a2a_algorithm, artifact_path=path,
-                   bucket_bytes=bucket_bytes, trace=trace)
+                   bucket_bytes=bucket_bytes, trace=trace,
+                   mapping=mapping)
 
     @classmethod
     def from_config(cls, coll, mesh=None, *, topology=None,
@@ -498,6 +541,8 @@ class Communicator:
             d += f", a2a={self._a2a}"
         if self.bucket_bytes:
             d += f", bucket_bytes={self.bucket_bytes}"
+        if self.mapping is not None:
+            d += f", mapping={self.mapping.summary()}"
         return d
 
     # -- decision resolution ------------------------------------------------
@@ -618,13 +663,21 @@ class Communicator:
             return self._composition_entries(req)
         return [self._resolve(req)]
 
+    def _mapping_header(self) -> Optional[str]:
+        """The plan-report context line a placement-tuned artifact adds:
+        which physical layout the rendered decisions assume."""
+        return None if self.mapping is None \
+            else f"mesh mapping: {self.mapping.summary()}"
+
     def explain(self, requests: Sequence[CollectiveRequest]) -> PlanReport:
         """Resolve requests through the exact lookup path the executing
-        ops use; renders the per-leaf {algorithm, segments, level} plan."""
+        ops use; renders the per-leaf {algorithm, segments, level} plan
+        (headed by the active mesh mapping when the artifact carries
+        one)."""
         entries: List[PlanEntry] = []
         for req in requests:
             entries.extend(self.plan(req))
-        return PlanReport(entries)
+        return PlanReport(entries, self._mapping_header())
 
     def gradient_requests(self, tree) -> List[CollectiveRequest]:
         """One request per gradient leaf, shaped the way `sync_gradients`
@@ -690,6 +743,8 @@ class Communicator:
         report = self._explain_gradients_plan(
             tree, bucket_bytes=bucket_bytes,
             overlap_backward=overlap_backward)
+        report = dataclasses.replace(report,
+                                     header=self._mapping_header())
         if measured is not None:
             spans = getattr(measured, "spans", measured)
             report = report.with_measured(spans)

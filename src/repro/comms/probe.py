@@ -132,10 +132,17 @@ def level_probe_pairs(mesh) -> List[Tuple[str, str, int, Tuple]]:
     stays inside the host, stepping "pod" crosses the pod boundary,
     stepping "dcn" crosses the DCN. Size-1 axes carry no link and are
     skipped; a mesh without sync axes (or None) yields [].
+
+    Sync axes follow the ACTIVE mesh's nesting order, innermost
+    (fastest-varying) axis first — not the canonical SYNC_AXES tuple —
+    so on a permuted mesh like ("pod", "dcn", "data") the innermost
+    "data" axis still probes as the innermost tier. On canonically
+    ordered meshes the two orders coincide.
     """
     if mesh is None:
         return []
-    axes = [a for a in SYNC_AXES if a in mesh.axis_names]
+    axes = [a for a in reversed(tuple(mesh.axis_names))
+            if a in SYNC_AXES]
     devs = np.asarray(mesh.devices)
     order = list(mesh.axis_names)
     origin = (0,) * devs.ndim

@@ -73,9 +73,15 @@ class PlanEntry:
 @dataclasses.dataclass
 class PlanReport:
     """Ordered dispatch decisions for a set of requests. A hierarchical
-    composition expands to one entry per phase, in execution order."""
+    composition expands to one entry per phase, in execution order.
+
+    ``header`` is an optional context line rendered above the entries —
+    the Communicator stamps its active mesh mapping there, so a plan
+    printed from a placement-tuned artifact says which physical layout
+    the decisions assume."""
 
     entries: List[PlanEntry]
+    header: Optional[str] = None
 
     def __iter__(self):
         return iter(self.entries)
@@ -87,7 +93,9 @@ class PlanReport:
         return [e.spec for e in self.entries]
 
     def render(self, indent: str = "  ") -> str:
-        return "\n".join(indent + e.render() for e in self.entries)
+        lines = [indent + self.header] if self.header else []
+        lines.extend(indent + e.render() for e in self.entries)
+        return "\n".join(lines)
 
     def with_measured(self, spans) -> "PlanReport":
         """Overlay recorded spans (`repro.obs.trace.Span`, duck-typed)
@@ -111,7 +119,7 @@ class PlanReport:
                 i += 1
             else:
                 out.append(e)
-        return PlanReport(out)
+        return PlanReport(out, self.header)
 
     def to_json(self) -> List[dict]:
         return [{

@@ -89,3 +89,19 @@ def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str], *,
         return jax.make_mesh(axis_shapes, axis_names, devices=devices,
                              axis_types=(_AxisType.Auto,) * len(axis_names))
     return jax.make_mesh(axis_shapes, axis_names, devices=devices)
+
+
+def mesh_from_devices(device_grid, axis_names: Sequence[str]):
+    """A Mesh over an EXPLICIT device grid, every axis Auto.
+
+    ``jax.make_mesh`` routes through ``mesh_utils.create_device_mesh``,
+    which is free to reorder devices for locality — the right default,
+    but fatal for a TUNED placement whose device order is the artifact's
+    contract. The tuned mesh-mapping path builds here instead: the grid
+    is taken verbatim."""
+    axis_names = tuple(axis_names)
+    if _AxisType is not None:
+        return jax.sharding.Mesh(
+            device_grid, axis_names,
+            axis_types=(_AxisType.Auto,) * len(axis_names))
+    return jax.sharding.Mesh(device_grid, axis_names)

@@ -16,6 +16,15 @@ from repro.core.topology.model import (
     probe_profile,
     probe_topology,
 )
+from repro.core.topology.placement import (
+    MeshMapping,
+    Workload,
+    axis_tiers,
+    enumerate_mappings,
+    identity_mapping,
+    price_mapping,
+    sweep_mappings,
+)
 from repro.core.topology.tune import (
     BUCKET_BYTES_CANDIDATES,
     decided_hierarchical_methods,
@@ -26,6 +35,7 @@ from repro.core.topology.tune import (
     pipelined_sync_time,
     sequential_sync_time,
     streamed_sync_time,
+    tune_mesh_mapping,
     tune_overlap_schedule,
     tune_topology,
 )

@@ -24,7 +24,12 @@ from repro.core.analytical.hierarchy import (
     padded_allreduce_schedule,
 )
 from repro.core.topology.decision import HierarchicalDecision
-from repro.core.topology.model import Topology
+from repro.core.topology.model import SYNC_AXES, Topology
+from repro.core.topology.placement import (
+    MeshMapping,
+    Workload,
+    sweep_mappings,
+)
 from repro.core.tuning.decision import TableMeta
 from repro.core.tuning.executor import SimulatorBackend
 from repro.core.tuning.session import TunerReport, TuningSession
@@ -49,6 +54,8 @@ def tune_topology(
     trials: int = 3,
     backend_factory: Optional[Callable] = None,
     schedule_leaf_bytes: Optional[Sequence[int]] = None,
+    tune_mapping: bool = False,
+    mapping_workload: Optional[Workload] = None,
 ) -> Tuple[HierarchicalDecision, Dict[str, List[TunerReport]]]:
     """Run a TuningSession per level and keep each level's best table.
 
@@ -63,6 +70,11 @@ def tune_topology(
     pipelined cost model (`tune_overlap_schedule`) and stamps the
     winning ``bucket_bytes`` into the artifact's meta, so consumers
     bucket + pipeline by default.
+
+    ``tune_mapping`` additionally sweeps the logical→physical placement
+    (`tune_mesh_mapping`) over the topology's own mesh axes and stamps
+    the winning `MeshMapping` into the artifact's meta, so
+    `Communicator.create` rebuilds the winning mesh at load.
     """
     levels, reports = [], {}
     for i, lv in enumerate(topology.levels):
@@ -79,6 +91,8 @@ def tune_topology(
     decision = HierarchicalDecision(levels)
     if schedule_leaf_bytes is not None:
         tune_overlap_schedule(topology, decision, schedule_leaf_bytes)
+    if tune_mapping:
+        tune_mesh_mapping(topology, decision, workload=mapping_workload)
     return decision, reports
 
 
@@ -280,6 +294,46 @@ def tune_overlap_schedule(
                 table.meta = TableMeta()
             table.meta.schedule = {"bucket_bytes": best[0],
                                    "pipeline": True}
+    return best
+
+
+def tune_mesh_mapping(
+    topology: Topology,
+    decision: Optional[HierarchicalDecision] = None,
+    *,
+    axes: Optional[Sequence[str]] = None,
+    shape: Optional[Sequence[int]] = None,
+    n_devices: Optional[int] = None,
+    workload: Optional[Workload] = None,
+    attach: bool = True,
+) -> MeshMapping:
+    """Sweep candidate logical→physical mappings (`sweep_mappings`) and
+    return the winner, its modeled workload cost attached.
+
+    ``axes``/``shape`` default to the topology's own mesh axes in
+    construction order (outermost first) — the mesh `tune_topology`'s
+    artifact will be loaded against; pass them explicitly when the
+    launch mesh carries extra axes (e.g. an inner "model" axis the sync
+    topology doesn't know about, with ``n_devices`` covering the model
+    ranks). With ``attach=True`` and a decision, the winner is stamped
+    into every level table's meta (``TableMeta.mapping``) so the
+    persisted artifact carries it and `Communicator.create` rebuilds
+    the exact winning mesh; artifacts without the field keep today's
+    default device order.
+    """
+    if axes is None:
+        axes = [lv.axis or SYNC_AXES[i]
+                for i, lv in enumerate(topology.levels)][::-1]
+    if shape is None:
+        shape = [lv.size for lv in topology.levels][::-1]
+    best, _ = sweep_mappings(topology, axes, shape,
+                             n_devices=n_devices, workload=workload)
+    if attach and decision is not None:
+        doc = best.to_json()
+        for _, table in decision.levels:
+            if table.meta is None:
+                table.meta = TableMeta()
+            table.meta.mapping = doc
     return best
 
 

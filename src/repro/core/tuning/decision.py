@@ -43,6 +43,12 @@ class TableMeta:
     reference, so ``Communicator.create`` can rebuild and dispatch them
     at load.  Absent, nothing changes — same compatibility contract as
     ``schedule``.
+
+    mapping optionally carries the swept logical→physical mesh mapping
+    (``topology/placement.MeshMapping.to_json``: axes, shape, flattened
+    device order, per-axis tiers, modeled cost) so ``Communicator.create``
+    can rebuild the exact winning mesh at load. Absent, meshes build in
+    default device order — same compatibility contract as ``schedule``.
     """
 
     tuner: str = "unknown"
@@ -55,6 +61,7 @@ class TableMeta:
     profile: Optional[dict] = None
     schedule: Optional[dict] = None
     programs: Optional[List[dict]] = None
+    mapping: Optional[dict] = None
 
     def to_json(self) -> dict:
         d = {
@@ -68,6 +75,9 @@ class TableMeta:
             # only stamped when synthesis ran, so program-free artifacts
             # stay byte-identical to the previous schema generation
             d["programs"] = self.programs
+        if self.mapping is not None:
+            # only stamped when the placement sweep ran — same contract
+            d["mapping"] = self.mapping
         return d
 
     @classmethod
@@ -82,6 +92,7 @@ class TableMeta:
             profile=d.get("profile"),
             schedule=d.get("schedule"),
             programs=d.get("programs"),
+            mapping=d.get("mapping"),
         )
 
 

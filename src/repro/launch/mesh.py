@@ -37,25 +37,50 @@ def make_production_mesh(*, multi_pod: bool = False) -> Tuple:
     return mesh, local_topology(mesh)
 
 
-def make_local_mesh(model_parallel: int = 1, pods: int = 1, dcn: int = 1):
+def local_mesh_spec(model_parallel: int = 1, pods: int = 1, dcn: int = 1
+                    ) -> Tuple[Tuple[int, ...], Tuple[str, ...]]:
+    """The ``(shape, axes)`` `make_local_mesh` will build over the
+    attached devices — shared with the placement sweep, so candidates
+    are enumerated for exactly the mesh the launch constructs. Raises
+    `ValueError` (not an assert: ``python -O`` must still catch it)
+    naming the offending CLI values when the device count doesn't
+    tile."""
+    n = jax.device_count()
+    if n % (model_parallel * pods * dcn) != 0:
+        raise ValueError(
+            f"{n} attached devices cannot tile --dcn={dcn} x "
+            f"--pods={pods} x --model-parallel={model_parallel} "
+            f"(= {model_parallel * pods * dcn} ranks); pick factors "
+            f"of {n}")
+    if dcn > 1:
+        return ((dcn, pods, n // (dcn * pods * model_parallel),
+                 model_parallel), ("dcn", "pod", "data", "model"))
+    if pods > 1:
+        return ((pods, n // (pods * model_parallel), model_parallel),
+                ("pod", "data", "model"))
+    return ((n // model_parallel, model_parallel), ("data", "model"))
+
+
+def make_local_mesh(model_parallel: int = 1, pods: int = 1, dcn: int = 1,
+                    *, mapping=None):
     """Smoke/test mesh over whatever devices exist. ``pods > 1`` splits the
     data axis into ("pod", "data") to exercise the hierarchical gradient
     sync on simulated devices; ``dcn > 1`` stacks the third tier on top
-    (("dcn", "pod", "data") — the full host/pod/DCN hierarchy)."""
-    n = jax.device_count()
-    assert n % (model_parallel * pods * dcn) == 0, \
-        f"{n} devices not divisible by {dcn} dcn x {pods} pods x " \
-        f"{model_parallel} mp"
-    if dcn > 1:
-        return compat.make_mesh(
-            (dcn, pods, n // (dcn * pods * model_parallel), model_parallel),
-            ("dcn", "pod", "data", "model"))
-    if pods > 1:
-        return compat.make_mesh(
-            (pods, n // (pods * model_parallel), model_parallel),
-            ("pod", "data", "model"))
-    return compat.make_mesh((n // model_parallel, model_parallel),
-                            ("data", "model"))
+    (("dcn", "pod", "data") — the full host/pod/DCN hierarchy).
+
+    ``mapping`` (a swept `MeshMapping`, e.g. from ``--tune-mapping`` or a
+    placement-tuned artifact) builds the mesh in the mapping's tuned
+    device order instead of the default; it must target the same axes
+    and shape this call would construct."""
+    shape, axes = local_mesh_spec(model_parallel, pods, dcn)
+    if mapping is not None:
+        if tuple(mapping.axes) != axes or tuple(mapping.shape) != shape:
+            raise ValueError(
+                f"mesh mapping targets axes={mapping.axes} "
+                f"shape={mapping.shape} but this launch builds "
+                f"axes={axes} shape={shape}")
+        return mapping.build_mesh()
+    return compat.make_mesh(shape, axes)
 
 
 def local_topology(mesh) -> Topology:
@@ -65,8 +90,11 @@ def local_topology(mesh) -> Topology:
     the ICI baseline ("intra_pod"); "pod" stacks "cross_pod" on top; a
     "dcn" axis pushes the naming down a tier (data becomes "intra_host",
     pod "intra_pod", dcn "cross_pod") — the same rule as
-    ``Topology.from_spec``."""
-    axes = [a for a in SYNC_AXES if a in mesh.axis_names]
+    ``Topology.from_spec``. Sync axes follow the MESH's nesting order
+    (innermost first), not the canonical tuple's, so a permuted mesh
+    still gets its innermost axis on the fastest tier."""
+    axes = [a for a in reversed(tuple(mesh.axis_names))
+            if a in SYNC_AXES]
     names = level_names_for(len(axes))
     return Topology(tuple(
         MeshLevel(name, mesh.shape[axis], DEFAULT_LEVEL_PROFILES[name],

@@ -117,6 +117,15 @@ def main():
                          "--tuning-table, gradient sync runs the per-level "
                          "reduce-scatter / all-reduce / all-gather "
                          "composition across every tier")
+    ap.add_argument("--tune-mapping", action="store_true",
+                    help="sweep candidate logical->physical device "
+                         "placements against the topology's per-level "
+                         "network profiles before building the mesh, and "
+                         "build it in the winning device order (the "
+                         "placement dimension of the collective search "
+                         "space; see core/topology/placement.py). An "
+                         "artifact stamped with a tuned mapping applies "
+                         "it at load without this flag")
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--log-every", type=int, default=1)
@@ -140,6 +149,25 @@ def main():
     shape = ShapeConfig(name="cli", seq_len=args.seq,
                         global_batch=args.batch, kind="train")
     topology = None
+
+    def build_mesh(pods=1, dcn=1):
+        """The launch mesh, optionally through the placement sweep:
+        --tune-mapping prices every candidate device order on the
+        active topology's per-level profiles and builds the winner."""
+        mapping = None
+        if args.tune_mapping:
+            from repro.core.topology import Topology, tune_mesh_mapping
+            from repro.launch.mesh import local_mesh_spec
+            mesh_shape, mesh_axes = local_mesh_spec(
+                model_parallel=args.model_parallel, pods=pods, dcn=dcn)
+            sweep_topo = topology or Topology.single_level(
+                mesh_shape[mesh_axes.index("data")])
+            mapping = tune_mesh_mapping(sweep_topo, axes=mesh_axes,
+                                        shape=mesh_shape, attach=False)
+            print(f"mesh mapping: {mapping.summary()}")
+        return make_local_mesh(model_parallel=args.model_parallel,
+                               pods=pods, dcn=dcn, mapping=mapping)
+
     if args.topology:
         import dataclasses as _dc
 
@@ -163,8 +191,7 @@ def main():
             return lv.size if lv else 1
 
         pods, dcn = axis_size("pod"), axis_size("dcn")
-        mesh = make_local_mesh(model_parallel=args.model_parallel,
-                               pods=pods, dcn=dcn)
+        mesh = build_mesh(pods=pods, dcn=dcn)
         data_lv = next((lv for lv in topology.levels if lv.axis == "data"),
                        topology.inner if len(topology.levels) > 1 else None)
         data_spec = data_lv.size if data_lv else None
@@ -186,7 +213,7 @@ def main():
                           for lv in reversed(topology.levels))
         print(f"topology: {desc}")
     else:
-        mesh = make_local_mesh(model_parallel=args.model_parallel)
+        mesh = build_mesh()
     parallel = ParallelConfig()
     table_path = args.tuning_table or args.decision
     # the launch's single Communicator: probe -> select -> decide -> dispatch
@@ -197,8 +224,13 @@ def main():
         mesh, topology=topology, artifact=table_path,
         probe=args.probe_fabric, algorithm=args.collective,
         bucket_bytes=bucket_bytes)
+    # an artifact stamped with a tuned mapping rebuilds the mesh at
+    # load — everything downstream must shard over THAT mesh
+    mesh = comm.mesh
     if table_path:
         print(f"tuning table: {table_path} ({comm.describe()})")
+    if comm.mapping is not None and not args.tune_mapping:
+        print(f"mesh mapping (from artifact): {comm.mapping.summary()}")
     if comm.bucket_bytes:
         print(f"gradient sync: bucketed overlap pipeline "
               f"(bucket_bytes={comm.bucket_bytes})")

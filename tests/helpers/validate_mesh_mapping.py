@@ -1,0 +1,178 @@
+"""Oracle validation of tuned mesh mappings on 8 simulated devices.
+
+The acceptance contract for the placement dimension:
+
+  * an artifact carrying ``TableMeta.mapping`` round-trips through
+    ``Communicator.create``: the mesh is rebuilt BIT-IDENTICAL to the
+    stamped mapping — axis names and the full device order asserted —
+    for a non-identity (deliberately remapped) device order;
+  * a mapping-free artifact leaves the mesh object untouched (the
+    backward-compat side of the contract);
+  * gradient sync through a REMAPPED mesh still matches the global-psum
+    oracle, at 2 levels and at 3 levels — device placement changes which
+    wires the phases ride, never the reduced values.
+
+Same pattern as validate_three_level.py: run as a subprocess (sets the
+device count before importing jax), prints OK/FAIL lines and a final
+``FAILS: n``; exit 1 on any FAIL.
+"""
+import os, sys
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+import numpy as np
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+from repro import compat
+from repro.comms import Communicator
+from repro.core.topology import (
+    MeshMapping,
+    Topology,
+    enumerate_mappings,
+    tune_mesh_mapping,
+)
+from repro.core.topology.decision import HierarchicalDecision
+from repro.core.tuning.decision import DecisionTable, TableMeta
+from repro.core.tuning.space import Method
+
+fails = []
+
+
+def check(name, ok, extra=""):
+    print(("OK  " if ok else "FAIL"), name, extra)
+    if not ok:
+        fails.append(name)
+
+
+def check_close(name, got, want, tol=2e-5):
+    err = float(jnp.max(jnp.abs(jnp.asarray(got, jnp.float32)
+                                - jnp.asarray(want, jnp.float32))))
+    check(name, err <= tol, "err=%.3g" % err)
+
+
+canonical = sorted(jax.devices(), key=lambda d: d.id)
+rng = np.random.default_rng(11)
+
+
+def hier_tables(names_ps):
+    return HierarchicalDecision([
+        (name, DecisionTable({
+            ("reduce_scatter", p, 1024): Method("ring", 1),
+            ("all_gather", p, 1024): Method("ring", 1),
+            ("all_reduce", p, 1024): Method("recursive_doubling", 1),
+        })) for name, p in names_ps])
+
+
+def sync_oracle_on(mesh, axes, tag, comm):
+    """sync_gradients through ``comm`` (over ``mesh``) vs the tree mean
+    over every rank — placement must never change the reduced values."""
+    nd = len(axes)
+    lead = tuple(mesh.shape[a] for a in axes)
+    tree = {"w": jnp.asarray(rng.normal(size=lead + (33, 7)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=lead + (5,)), jnp.float32)}
+    want = jax.tree.map(lambda a: a.mean(tuple(range(nd))), tree)
+    spec = P(*axes)
+
+    def sync(t):
+        local = jax.tree.map(lambda a: a[(0,) * nd], t)
+        out = comm.sync_gradients(local, mean=True)
+        return jax.tree.map(lambda a: a[(None,) * nd], out)
+
+    got = jax.jit(compat.shard_map(
+        sync, mesh=mesh,
+        in_specs=(jax.tree.map(lambda _: spec, tree),),
+        out_specs=jax.tree.map(lambda _: spec, tree),
+        check_vma=False))(tree)
+    for k in tree:
+        check_close(f"remapped_sync_vs_oracle/{tag}/{k}",
+                    got[k][(0,) * nd], want[k])
+
+
+# ---------------------------------------------------------------------------
+# 1) 3-level artifact round-trip: non-identity mapping rebuilds the mesh
+# ---------------------------------------------------------------------------
+AXES3, SHAPE3 = ("dcn", "pod", "data"), (2, 2, 2)
+topo3 = Topology.from_spec("2x2x2")
+cands = enumerate_mappings(topo3, AXES3, SHAPE3)
+remap = next(c for c in cands if not c.is_identity)
+check("candidates/non_identity_available", remap is not None,
+      f"order={remap.device_order}")
+
+hier3 = hier_tables([("intra_host", 2), ("intra_pod", 2),
+                     ("cross_pod", 2)])
+for _, table in hier3.levels:
+    if table.meta is None:
+        table.meta = TableMeta()
+    table.meta.mapping = remap.to_json()
+
+import tempfile
+with tempfile.TemporaryDirectory() as td:
+    path = os.path.join(td, "mapped.json")
+    hier3.save(path)
+    launch_mesh = compat.make_mesh(SHAPE3, AXES3)
+    comm3 = Communicator.create(launch_mesh, artifact=path)
+
+check("roundtrip/mapping_adopted", comm3.mapping == remap)
+check("roundtrip/axis_names",
+      tuple(comm3.mesh.axis_names) == AXES3,
+      f"got={tuple(comm3.mesh.axis_names)}")
+got_ids = [d.id for d in np.asarray(comm3.mesh.devices).reshape(-1)]
+want_ids = [canonical[i].id for i in remap.device_order]
+check("roundtrip/device_order_bit_identical", got_ids == want_ids,
+      f"got={got_ids} want={want_ids}")
+# and the rebuilt mesh is exactly what build_mesh() constructs
+direct = remap.build_mesh()
+check("roundtrip/equals_build_mesh",
+      [d.id for d in np.asarray(direct.devices).reshape(-1)] == want_ids
+      and tuple(direct.axis_names) == AXES3)
+check("roundtrip/describe_renders_mapping",
+      "mapping=" in comm3.describe(), comm3.describe())
+plan = comm3.explain_gradients(
+    {"w": jax.ShapeDtypeStruct((64,), "float32")})
+check("roundtrip/plan_header", plan.header is not None
+      and "mesh mapping" in plan.render())
+
+# ---------------------------------------------------------------------------
+# 2) mapping-free artifact leaves the mesh untouched
+# ---------------------------------------------------------------------------
+plain = hier_tables([("intra_host", 2), ("intra_pod", 2),
+                     ("cross_pod", 2)])
+mesh_plain = compat.make_mesh(SHAPE3, AXES3)
+comm_plain = Communicator.create(mesh_plain, artifact=plain)
+check("mapping_free/mesh_untouched", comm_plain.mesh is mesh_plain)
+check("mapping_free/no_mapping", comm_plain.mapping is None)
+check("mapping_free/no_meta_key",
+      all("mapping" not in (t.meta.to_json() if t.meta else {})
+          for _, t in plain.levels))
+
+# ---------------------------------------------------------------------------
+# 3) gradient sync through the remapped mesh == global psum, 3 levels
+# ---------------------------------------------------------------------------
+sync_oracle_on(comm3.mesh, ("dcn", "pod", "data"), "3level", comm3)
+
+# ---------------------------------------------------------------------------
+# 4) gradient sync through a remapped mesh == global psum, 2 levels
+# ---------------------------------------------------------------------------
+AXES2, SHAPE2 = ("pod", "data"), (2, 4)
+topo2 = Topology.two_level(4, 2)
+remap2 = next(c for c in enumerate_mappings(topo2, AXES2, SHAPE2)
+              if not c.is_identity)
+hier2 = hier_tables([("intra_pod", 4), ("cross_pod", 2)])
+best2 = tune_mesh_mapping(topo2, hier2, axes=AXES2, shape=SHAPE2)
+check("tune/2level_winner_not_worse",
+      best2.cost is not None, f"winner={best2.summary()}")
+# force the NON-identity mapping into the artifact: the oracle must
+# hold for any placement, not just the winner
+for _, table in hier2.levels:
+    table.meta.mapping = remap2.to_json()
+mesh2 = compat.make_mesh(SHAPE2, AXES2)
+comm2 = Communicator.create(mesh2, artifact=hier2)
+check("2level/mapping_adopted", comm2.mapping == remap2,
+      f"order={remap2.device_order}")
+got2 = [d.id for d in np.asarray(comm2.mesh.devices).reshape(-1)]
+check("2level/device_order", got2 == [canonical[i].id
+                                      for i in remap2.device_order])
+sync_oracle_on(comm2.mesh, ("pod", "data"), "2level", comm2)
+
+print("FAILS:", len(fails))
+sys.exit(1 if fails else 0)

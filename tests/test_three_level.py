@@ -99,6 +99,33 @@ def test_level_probe_pairs_two_level_and_model_axis():
     assert by_name["cross_pod"] == (0, 8)
 
 
+def test_level_probe_pairs_follow_permuted_axis_order():
+    """On a mesh built with a PERMUTED axis order — ("pod", "dcn",
+    "data") — pair selection must follow the mesh's own nesting
+    (innermost coordinate first), not the canonical SYNC_AXES tuple:
+    the innermost "data" axis probes as the innermost tier and its
+    pair steps the fastest-varying coordinate."""
+    mesh = SimpleNamespace(axis_names=("pod", "dcn", "data"),
+                           shape={"pod": 2, "dcn": 2, "data": 2},
+                           devices=np.arange(8).reshape(2, 2, 2))
+    pairs = level_probe_pairs(mesh)
+    assert [(name, axis) for name, axis, _, _ in pairs] == [
+        ("intra_host", "data"), ("intra_pod", "dcn"),
+        ("cross_pod", "pod")]
+    by_axis = {axis: (int(a), int(b)) for _, axis, _, (a, b) in pairs}
+    # strides on this layout: data=1 (innermost), dcn=2, pod=4
+    assert by_axis["data"] == (0, 1)
+    assert by_axis["dcn"] == (0, 2)
+    assert by_axis["pod"] == (0, 4)
+    # and the synthesized topology carries each level's own axis, with
+    # each fitted profile coming from that axis's fabric
+    topo = probe_mesh_topology(mesh, timer=fake_timer_for(mesh))
+    assert [lv.axis for lv in topo.levels] == ["data", "dcn", "pod"]
+    for lv in topo.levels:
+        assert lv.profile.byte_time == pytest.approx(
+            FAKE_FABRIC[lv.axis][1], rel=0.05)
+
+
 def test_level_probe_pairs_skip_degenerate_axes():
     assert level_probe_pairs(None) == []
     mesh = fake_mesh(dcn=None, pod=None, data=4)
